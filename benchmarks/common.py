@@ -1,0 +1,77 @@
+"""Shared benchmark utilities: a small-but-real model, timing, CSV rows."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import aot as A
+from repro.core import peft as P
+from repro.data.pipeline import LMStream
+from repro.models.model import Model, ModelOptions
+from repro.train.step import TrainConfig, make_train_step, split_train
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.2f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Mean wall time per call in microseconds (blocks on device results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_model(d_model: int = 256, layers: int = 6, vocab: int = 2048,
+                heads: int = 4, kv: int = 2):
+    """A small-but-real dense backbone for wall-clock comparisons on CPU."""
+    cfg = configs.get("smollm-360m").replace(
+        num_layers=layers, pattern_repeats=layers, d_model=d_model,
+        num_heads=heads, num_kv_heads=kv, head_dim=d_model // heads,
+        d_ff=d_model * 3, vocab_size=vocab,
+        shapes=configs.get("smollm-360m").shapes, skip_shapes=())
+    model = Model(cfg, ModelOptions(chunk_q=128, chunk_kv=128))
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def pretrain(cfg, model, params, steps: int = 40, seq: int = 64, batch: int = 8):
+    popt = P.PEFTOptions(method="ft")
+    tcfg = TrainConfig(peft=popt, lr=3e-3, loss_chunk=0)
+    init_state, train_step = make_train_step(model, tcfg)
+    trainable, frozen = split_train(params, P.init(jax.random.PRNGKey(1), cfg,
+                                                   popt), "ft")
+    state = init_state(trainable)
+    step = jax.jit(train_step)
+    stream = LMStream(vocab_size=cfg.vocab_size, seq_len=seq, batch_size=batch,
+                      seed=0)
+    for i in range(steps):
+        b = stream.next()
+        state, _ = step(state, frozen,
+                        {k: jnp.asarray(v) for k, v in b.items()},
+                        jax.random.PRNGKey(i))
+    return state["trainable"]["backbone"]
+
+
+def random_aot_fused(cfg, params, seed: int = 0, scale: float = 0.02):
+    opt = A.AoTOptions(mode="fc", rank=16, dropout=0.0)
+    pp = P.init(jax.random.PRNGKey(seed), cfg,
+                P.PEFTOptions(method="aot", aot=opt))
+    pp["aot"] = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.PRNGKey(seed + 77), x.shape) * scale,
+        pp["aot"])
+    return A.fuse(pp["aot"], cfg, opt, embed=params["embed"]["tok"],
+                  vocab_chunk=512)

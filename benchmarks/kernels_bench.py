@@ -1,0 +1,54 @@
+"""Kernel-level microbenchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (correctness
+only, timings meaningless), so the wall-clock comparison uses the XLA
+production paths: chunked blockwise attention vs naive reference, and the
+fused-gather AoT bias vs the two-pass XLA gather+add. FLOP counts come from
+compiled cost analysis — the numbers the roofline consumes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.models import layers as L
+
+
+def run():
+    rng = np.random.default_rng(0)
+    b, s, h, kvh, hd = 2, 1024, 8, 2, 64
+    t = lambda *sh: jnp.asarray(rng.normal(size=sh), jnp.float32)
+    q, k, v = t(b, s, h, kvh and hd) if False else t(b, s, h, hd), t(b, s, kvh, hd), t(b, s, kvh, hd)
+
+    ref = jax.jit(lambda q, k, v: L.attention_ref(q, k, v, causal=True))
+    chk = jax.jit(lambda q, k, v: L.attention_chunked(
+        q, k, v, causal=True, chunk_q=256, chunk_kv=1024))
+    us_ref = time_fn(ref, q, k, v, iters=5)
+    us_chk = time_fn(chk, q, k, v, iters=5)
+    emit("kernels/attention_ref", us_ref, f"s={s}")
+    emit("kernels/attention_chunked", us_chk,
+         f"s={s} speedup={us_ref / us_chk:.2f}")
+
+    f_ref = ref.lower(q, k, v).compile().cost_analysis()["flops"]
+    f_chk = chk.lower(q, k, v).compile().cost_analysis()["flops"]
+    emit("kernels/attention_flops", 0.0,
+         f"ref={f_ref:.3e} chunked={f_chk:.3e} causal_skip={f_ref / f_chk:.2f}x")
+
+    # AoT bias: fused gather+add vs two-pass
+    T, V, d = 8192, 50_000, 1024
+    hh = t(T, d)
+    tbl = t(V, d)
+    ids = jnp.asarray(rng.integers(0, V, (T,)), jnp.int32)
+    two_pass = jax.jit(lambda h, tb, i: h + jnp.take(tb, i, axis=0))
+    us2 = time_fn(two_pass, hh, tbl, ids, iters=10)
+    emit("kernels/aot_bias_xla", us2, f"T={T} d={d}")
+    ca = two_pass.lower(hh, tbl, ids).compile().cost_analysis()
+    emit("kernels/aot_bias_bytes", 0.0,
+         f"bytes={ca.get('bytes accessed', 0):.3e} "
+         f"ideal={(3 * T * d * 4):.3e} (pallas kernel removes the intermediate)")
+
+
+if __name__ == "__main__":
+    run()

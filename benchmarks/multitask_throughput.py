@@ -1,0 +1,57 @@
+"""Paper §3.1 / Table 1: multi-task inference with one backbone.
+
+Compares decode throughput of (a) one batched multi-task pass over mixed
+task ids vs (b) sequential per-task batches — the resource-allocation win
+the paper argues for. Also reports the fused-table residency cost
+(paper §3.3 RAM trade-off).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_model, emit, random_aot_fused, time_fn
+from repro.core import aot as A
+from repro.core import peft as P
+from repro.serve.engine import ServeConfig, ServeEngine
+
+
+def run(n_tasks=4, batch=8, prompt=32, steps=16):
+    cfg, model, params = bench_model()
+    rng = np.random.default_rng(0)
+    tasks = [random_aot_fused(cfg, params, seed=t) for t in range(n_tasks)]
+
+    eng_mt = ServeEngine(model, params, ServeConfig(max_len=prompt + steps + 4),
+                         fused_tasks=tasks)
+    prompts = rng.integers(0, cfg.vocab_size, (batch, prompt)).astype(np.int32)
+    task_ids = rng.integers(0, n_tasks, batch).astype(np.int32)
+
+    us_mt = time_fn(lambda: eng_mt.generate(prompts, steps, task_ids), iters=3)
+    tput_mt = batch * steps / (us_mt / 1e6)
+    emit("multitask/batched", us_mt, f"tok_per_s={tput_mt:.0f}")
+
+    # sequential per-task serving (what you do without multi-task inference)
+    def sequential():
+        outs = []
+        for t in range(n_tasks):
+            idx = np.where(task_ids == t)[0]
+            if len(idx) == 0:
+                continue
+            eng1 = ServeEngine(model, params,
+                               ServeConfig(max_len=prompt + steps + 4),
+                               fused_tasks=[tasks[t]])
+            outs.append(eng1.generate(prompts[idx], steps,
+                                      np.zeros(len(idx), np.int32)))
+        return outs
+    us_seq = time_fn(sequential, warmup=1, iters=2)
+    tput_seq = batch * steps / (us_seq / 1e6)
+    emit("multitask/sequential", us_seq, f"tok_per_s={tput_seq:.0f}")
+    emit("multitask/speedup", 0.0, f"x={us_seq / us_mt:.2f}")
+
+    gb = A.table_bytes(cfg, n_tasks=n_tasks, bytes_per_el=2) / 1e9
+    emit("multitask/fused_tables_gb", 0.0, f"gb={gb:.3f} tasks={n_tasks}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,76 @@
+"""Paper App Figs 4-7: accuracy vs number of trained parameters.
+
+Sweeps the AoT FC rank and the P-Tuning v2 prefix length on one task and
+reports (params, accuracy) pairs. The paper's point: AoT's rank only affects
+*training* parameters — after fusion it vanishes from serving, unlike
+p/rank-coupled methods.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import bench_model, emit, pretrain
+from benchmarks.glue_synthetic import _train_eval
+from repro.core import aot as A
+from repro.core import peft as P
+from repro.data.tasks import ClassificationTask
+
+
+def _n_params(cfg, method, rank_or_p):
+    if method == "aot_fc":
+        opt = P.PEFTOptions(method="aot", num_classes=2,
+                            aot=A.AoTOptions(mode="fc", rank=rank_or_p))
+    else:
+        opt = P.PEFTOptions(method="ptv2", num_classes=2, prompt_len=rank_or_p)
+    pp = P.init(jax.random.PRNGKey(0), cfg, opt)
+    return sum(x.size for x in jax.tree.leaves(pp))
+
+
+def run(steps=120):
+    cfg, model, params = bench_model(d_model=128, layers=4, vocab=1024)
+    params = pretrain(cfg, model, params, steps=40)
+    task = ClassificationTask("pe", vocab_size=cfg.vocab_size, seq_len=32,
+                              num_classes=2, seed=5)
+    for rank in [4, 16, 64]:
+        import benchmarks.glue_synthetic as g
+        popt_acc = _sweep_acc(cfg, model, params, task, "aot", rank=rank,
+                              steps=steps)
+        emit(f"param_eff/aot_fc/rank{rank}", 0.0,
+             f"params={_n_params(cfg, 'aot_fc', rank)} acc={popt_acc:.3f}")
+    for p_len in [4, 16, 64]:
+        acc = _sweep_acc(cfg, model, params, task, "ptv2", prompt_len=p_len,
+                         steps=steps)
+        emit(f"param_eff/ptv2/p{p_len}", 0.0,
+             f"params={_n_params(cfg, 'ptv2', p_len)} acc={acc:.3f}")
+
+
+def _sweep_acc(cfg, model, params, task, method, rank=16, prompt_len=8,
+               steps=120):
+    import jax.numpy as jnp
+    from repro.train.step import TrainConfig, make_train_step, split_train
+    popt = P.PEFTOptions(method=method, num_classes=task.num_classes,
+                         prompt_len=prompt_len,
+                         aot=A.AoTOptions(mode="fc", rank=rank, dropout=0.0))
+    pp = P.init(jax.random.PRNGKey(0), cfg, popt)
+    tcfg = TrainConfig(peft=popt, lr=8e-3, loss_chunk=0)
+    init_state, train_step = make_train_step(model, tcfg, classify=True)
+    trainable, frozen = split_train(params, pp, method)
+    state = init_state(trainable)
+    step = jax.jit(train_step)
+    for i in range(steps):
+        b = task.batch(16, step=i)
+        state, _ = step(state, frozen,
+                        {k: jnp.asarray(v) for k, v in b.items()},
+                        jax.random.PRNGKey(i))
+    peft = P.make(state["trainable"]["peft"], popt)
+    accs = []
+    for i in range(4):
+        b = task.batch(32, step=90_000 + i)
+        lg, _ = model.classify(params, {"tokens": jnp.asarray(b["tokens"])}, peft)
+        accs.append(float((jnp.argmax(lg, -1) == jnp.asarray(b["labels"])).mean()))
+    return float(np.mean(accs))
+
+
+if __name__ == "__main__":
+    run()

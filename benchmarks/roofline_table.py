@@ -1,0 +1,48 @@
+"""EXPERIMENTS.md §Roofline generator: reads results/dryrun/*.json, emits the
+per-cell three-term roofline table (and the CSV rows for run.py)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+from repro import configs
+from repro.roofline.analysis import HW_V5E, format_row, roofline_report
+
+
+def load_cells(out_dir="results/dryrun", tag="pod1"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(out_dir, f"*__{tag}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run(out_dir="results/dryrun", tag="pod1", label=None):
+    label = label or (f"{tag}-opt" if "opt" in out_dir else f"{tag}-base")
+    rows = []
+    for cell in load_cells(out_dir, tag):
+        name = f"{cell['arch']}/{cell['shape']}"
+        if "skipped" in cell:
+            emit(f"roofline/{label}/{name}", 0.0, f"SKIP: {cell['skipped']}")
+            continue
+        cfg = configs.get(cell["arch"])
+        shape = cfg.shape(cell["shape"])
+        rep = roofline_report(
+            flops_per_device=cell["flops_per_device"],
+            bytes_per_device=cell["bytes_per_device"],
+            coll=cell["collectives"], n_chips=cell["n_chips"],
+            cfg=cfg, shape=shape, n_params_total=cell["n_params_total"])
+        emit(f"roofline/{label}/{name}", rep["compute_s"] * 1e6,
+             f"dom={rep['dominant']} comp_ms={rep['compute_s']*1e3:.3f} "
+             f"mem_ms={rep['memory_s']*1e3:.3f} coll_ms={rep['collective_s']*1e3:.3f} "
+             f"useful={rep['useful_flops_ratio']:.3f} "
+             f"roofline_frac={rep['roofline_fraction']:.3f} "
+             f"hbm_gb={cell['memory']['argument_bytes']/1e9 + cell['memory']['temp_bytes']/1e9:.2f}")
+        rows.append((cell["arch"], cell["shape"], rep, cell))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Paper Fig. 3 / App Figs 8-9: inference-time overhead of each PEFT method
+relative to the vanilla backbone.
+
+Measures the full forward (the paper's setting: encoder-style evaluation of a
+sequence) for batch x seq grid points, normalized to plain fine-tuning
+(= vanilla weights). The paper's claims to reproduce:
+  * fused AoT ~ 1.00x (zero-cost),
+  * LoRA-unfused / Adapters carry 10-70% overhead,
+  * P-Tuning v2 overhead grows with prefix length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_model, emit, random_aot_fused, time_fn
+from repro.core import aot as A
+from repro.core import peft as P
+
+
+def _peft_bundle(cfg, method, params, prompt_len=20, rank=16):
+    if method == "aot_fused":
+        fused = random_aot_fused(cfg, params)
+        opt = P.PEFTOptions(method="aot", aot=A.AoTOptions(mode="fused"))
+        return P.make({"aot": fused}, opt)
+    opt = P.PEFTOptions(method=method, prompt_len=prompt_len, lora_rank=rank,
+                        adapter_rank=rank,
+                        aot=A.AoTOptions(mode="fc", rank=rank, dropout=0.0))
+    pp = P.init(jax.random.PRNGKey(0), cfg, opt)
+    pp = jax.tree.map(lambda x: jax.random.normal(
+        jax.random.PRNGKey(1), x.shape) * 0.02, pp)
+    return P.make(pp, opt)
+
+
+def run():
+    cfg, model, params = bench_model()
+    rng = np.random.default_rng(0)
+    methods = ["vanilla", "aot_fused", "bitfit", "lora", "adapters", "ptv2",
+               "ptv1"]
+    for b, s in [(1, 64), (8, 64), (1, 384), (8, 384)]:
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+        base_us = None
+        for m in methods:
+            peft = None if m == "vanilla" else _peft_bundle(cfg, m, params)
+            fn = jax.jit(lambda p, t, peft=peft: model.logits(
+                p, {"tokens": t}, peft)[0])
+            us = time_fn(fn, params, tokens, iters=8)
+            if m == "vanilla":
+                base_us = us
+            emit(f"speed_overhead/b{b}_s{s}/{m}", us,
+                 f"rel={us / base_us:.3f}")
+
+
+if __name__ == "__main__":
+    run()

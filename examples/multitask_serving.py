@@ -1,0 +1,101 @@
+"""Multi-task serving — the paper's deployment headline.
+
+Fine-tunes THREE tasks with AoT P-Tuning against one frozen backbone, fuses
+each task's P tables, stacks them, and serves a mixed batch where every
+request picks its task by id — one backbone pass, zero per-task overhead.
+
+    PYTHONPATH=src python examples/multitask_serving.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import aot as A
+from repro.core import peft as P
+from repro.data.pipeline import LMStream
+from repro.data.tasks import ClassificationTask
+from repro.models.model import Model, ModelOptions
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.train.step import TrainConfig, make_train_step, split_train
+
+
+def pretrain(cfg, model, params):
+    popt = P.PEFTOptions(method="ft")
+    init_state, train_step = make_train_step(model, TrainConfig(peft=popt, lr=3e-3))
+    trainable, frozen = split_train(params, P.init(jax.random.PRNGKey(1), cfg, popt), "ft")
+    state, step = init_state(trainable), jax.jit(train_step)
+    stream = LMStream(vocab_size=cfg.vocab_size, seq_len=32, batch_size=8, seed=0)
+    for i in range(50):
+        b = stream.next()
+        state, _ = step(state, frozen, {k: jnp.asarray(v) for k, v in b.items()},
+                        jax.random.PRNGKey(i))
+    return state["trainable"]["backbone"]
+
+
+def finetune_task(cfg, model, params, task):
+    popt = P.PEFTOptions(method="aot", num_classes=task.num_classes,
+                         aot=A.AoTOptions(mode="fc", rank=16, dropout=0.0))
+    pp = P.init(jax.random.PRNGKey(task.seed), cfg, popt)
+    init_state, train_step = make_train_step(
+        model, TrainConfig(peft=popt, lr=8e-3), classify=True)
+    trainable, frozen = split_train(params, pp, "aot")
+    state, step = init_state(trainable), jax.jit(train_step)
+    for i in range(100):
+        b = task.batch(16, step=i)
+        state, _ = step(state, frozen, {k: jnp.asarray(v) for k, v in b.items()},
+                        jax.random.PRNGKey(i))
+    peft_params = state["trainable"]["peft"]
+    fused = A.fuse(peft_params["aot"], cfg, popt.aot,
+                   embed=params["embed"]["tok"], vocab_chunk=64)
+    return fused, peft_params["head"]
+
+
+def main():
+    cfg = configs.reduced(configs.get("smollm-360m"), repeats=2)
+    model = Model(cfg, ModelOptions(chunk_q=16, chunk_kv=16))
+    params = pretrain(cfg, model, model.init(jax.random.PRNGKey(0)))
+
+    tasks = [ClassificationTask(f"task{i}", vocab_size=cfg.vocab_size,
+                                seq_len=32, num_classes=2, seed=i)
+             for i in range(3)]
+    fused, heads = zip(*(finetune_task(cfg, model, params, t) for t in tasks))
+    print(f"fused {len(tasks)} task table sets "
+          f"({A.table_bytes(cfg, len(tasks), 2) / 1e6:.1f} MB total)")
+
+    # mixed batch: every row picks its own task
+    rng = np.random.default_rng(0)
+    rows, labels, task_ids = [], [], []
+    for i in range(9):
+        t = i % 3
+        b = tasks[t].batch(1, step=7_000 + i)
+        rows.append(b["tokens"][0])
+        labels.append(int(b["labels"][0]))
+        task_ids.append(t)
+    toks = jnp.asarray(np.stack(rows))
+    tids = jnp.asarray(task_ids, jnp.int32)
+
+    stacked = A.stack_tasks(list(fused))
+    fopt = P.PEFTOptions(method="aot", aot=A.AoTOptions(mode="fused"))
+    peft = P.make({"aot": stacked}, fopt)
+    peft["task_ids"] = tids
+    h, _ = model.forward(params, {"tokens": toks}, peft)   # ONE backbone pass
+    correct = 0
+    for i in range(9):
+        head = heads[task_ids[i]]
+        pred = int(jnp.argmax(h[i, -1] @ head["w"] + head["b"]))
+        correct += int(pred == labels[i])
+        print(f"request {i}: task={task_ids[i]} pred={pred} gold={labels[i]}")
+    print(f"mixed-batch accuracy: {correct}/9")
+
+    # and generation with per-request task conditioning
+    eng = ServeEngine(model, params, ServeConfig(max_len=64),
+                      fused_tasks=list(fused))
+    prompts = rng.integers(0, cfg.vocab_size, (3, 8)).astype(np.int32)
+    out = eng.generate(prompts, steps=6, task_ids=np.asarray([0, 1, 2], np.int32))
+    print("generated (per-task continuations):")
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

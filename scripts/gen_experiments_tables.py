@@ -1,0 +1,56 @@
+"""Regenerate the EXPERIMENTS.md tables from results/dryrun*/ JSONs.
+
+    PYTHONPATH=src python scripts/gen_experiments_tables.py [dir] [tag]
+"""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import configs
+from repro.roofline.analysis import roofline_report
+
+
+def table(out_dir, tag):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, f"*__{tag}.json"))):
+        d = json.load(open(path))
+        if "skipped" in d:
+            rows.append((d["arch"], d["shape"], None, d["skipped"]))
+            continue
+        cfg = configs.get(d["arch"])
+        shape = cfg.shape(d["shape"])
+        rep = roofline_report(
+            flops_per_device=d["flops_per_device"],
+            bytes_per_device=d["bytes_per_device"],
+            coll=d["collectives"], n_chips=d["n_chips"],
+            cfg=cfg, shape=shape, n_params_total=d["n_params_total"])
+        rows.append((d["arch"], d["shape"], (rep, d), None))
+    return rows
+
+
+def emit(out_dir="results/dryrun", tag="pod1"):
+    print(f"### {out_dir} ({tag})\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "MODEL/HLO flops | roofline frac | HBM args+temp (GB) |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch, shape, payload, skip in table(out_dir, tag):
+        if skip:
+            print(f"| {arch} | {shape} | — | — | — | SKIP | — | — | — |")
+            continue
+        rep, d = payload
+        m = d["memory"]
+        hbm = (m["argument_bytes"] + m["temp_bytes"]) / 1e9
+        print(f"| {arch} | {shape} | {rep['compute_s']*1e3:.1f} ms "
+              f"| {rep['memory_s']*1e3:.1f} ms | {rep['collective_s']*1e3:.1f} ms "
+              f"| {rep['dominant']} | {rep['useful_flops_ratio']:.3f} "
+              f"| {rep['roofline_fraction']:.4f} | {hbm:.1f} |")
+    print()
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    t = sys.argv[2] if len(sys.argv) > 2 else "pod1"
+    emit(d, t)

@@ -1,0 +1,2 @@
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401
+from repro.checkpoint.reshard import reshard_tree  # noqa: F401

@@ -1,0 +1,35 @@
+"""Elastic resharding: place a (host) pytree onto an arbitrary mesh.
+
+The elastic-scaling story: a checkpoint taken on mesh A is restored as host
+numpy arrays (mesh-agnostic), then ``reshard_tree`` device_puts every leaf
+with the NamedSharding derived from the *new* mesh + the same logical rules.
+Works across mesh shapes (16x16 -> 8x8 after losing a pod slice, or ->
+2x16x16 when scaling out) as long as dims stay divisible; non-divisible axes
+fall back to replication, exactly like the sharding constraint helper.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distrib import sharding as shlib
+
+
+def reshard_tree(tree, mesh: Mesh, rules: Dict,
+                 names_fn: Callable[[tuple, object], Sequence[Optional[str]]]):
+    """names_fn(path, leaf) -> logical axis names for that leaf."""
+    flat = jax.tree.flatten_with_path(tree)
+    paths_leaves, treedef = flat
+    out = []
+    for path, leaf in paths_leaves:
+        names = names_fn(tuple(str(p) for p in path), leaf)
+        spec = shlib.spec_for(names, leaf.shape, mesh, rules)
+        out.append(jax.device_put(leaf, NamedSharding(mesh, spec)))
+    return jax.tree.unflatten(treedef, out)
+
+
+def replicate_tree(tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda x: jax.device_put(x, NamedSharding(mesh, P())), tree)

@@ -1,0 +1,47 @@
+"""Architecture config registry.
+
+``get(name)`` resolves any registered architecture; ``ASSIGNED`` lists the 10
+archs assigned to this paper (each paired with the LM shape set);
+``PAPER_BACKBONES`` lists the paper's own RoBERTa/DeBERTa encoders.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401 (re-export)
+    ArchConfig, MoEConfig, ShapeSpec, LM_SHAPES,
+    TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K,
+    BLOCK_ATTN, BLOCK_RGLRU, BLOCK_MLSTM, BLOCK_SLSTM,
+    reduced,
+)
+
+from repro.configs.h2o_danube_1p8b import CONFIG as _h2o
+from repro.configs.olmo_1b import CONFIG as _olmo
+from repro.configs.smollm_360m import CONFIG as _smollm
+from repro.configs.qwen2p5_14b import CONFIG as _qwen25
+from repro.configs.hubert_xlarge import CONFIG as _hubert
+from repro.configs.paligemma_3b import CONFIG as _pali
+from repro.configs.recurrentgemma_9b import CONFIG as _rg
+from repro.configs.qwen3_moe_30b_a3b import CONFIG as _qwen3moe
+from repro.configs.llama4_maverick_400b_a17b import CONFIG as _llama4
+from repro.configs.xlstm_350m import CONFIG as _xlstm
+from repro.configs.roberta_large import CONFIG as _roberta
+from repro.configs.deberta_xl import CONFIG as _deberta
+
+ASSIGNED: List[ArchConfig] = [
+    _h2o, _olmo, _smollm, _qwen25, _hubert,
+    _pali, _rg, _qwen3moe, _llama4, _xlstm,
+]
+PAPER_BACKBONES: List[ArchConfig] = [_roberta, _deberta]
+
+REGISTRY: Dict[str, ArchConfig] = {c.name: c for c in ASSIGNED + PAPER_BACKBONES}
+
+
+def get(name: str) -> ArchConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def assigned_names() -> List[str]:
+    return [c.name for c in ASSIGNED]

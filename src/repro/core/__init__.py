@@ -1,0 +1,3 @@
+# The paper's primary contribution: Ahead-of-Time P-Tuning (core/aot.py)
+# plus the PEFT baseline registry (core/peft.py).
+from repro.core import aot, peft  # noqa: F401

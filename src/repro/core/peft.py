@@ -1,0 +1,145 @@
+"""Unified PEFT registry: AoT P-Tuning + every baseline the paper compares.
+
+Methods (paper Table 1):
+  ``ft``        full fine-tuning (no extra params; optimizer mask selects all)
+  ``none``      frozen backbone, nothing trained (eval only)
+  ``aot``       Ahead-of-Time P-Tuning (fc / kron / fused via AoTOptions)
+  ``bitfit``    trainable bias deltas on attn-out / MLP-out / final norm
+  ``lora``      low-rank deltas on W_q and W_v (unfused at train; fuse for serving)
+  ``adapters``  Houlsby bottleneck adapters after attention and after MLP
+  ``ptv1``      soft prompt prepended to input embeddings (P-Tuning v1)
+  ``ptv2``      per-layer soft K/V prefixes (P-Tuning v2 / prefix tuning)
+
+The model consumes ``peft = {"method": <static str>, "params": <pytree>,
+"opt": <static options>}``. Per-layer leaves are stacked on axis 0 (length
+``num_layers``) so the model's scan can slice them per group.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aot as aot_mod
+from repro.core.aot import AoTOptions
+from repro.models.layers import dense_init
+
+METHODS = ("ft", "none", "aot", "bitfit", "lora", "adapters", "ptv1", "ptv2")
+
+
+@dataclass(frozen=True)
+class PEFTOptions:
+    method: str = "aot"
+    aot: AoTOptions = field(default_factory=AoTOptions)
+    lora_rank: int = 16
+    lora_alpha: float = 32.0
+    adapter_rank: int = 64
+    prompt_len: int = 20          # p for ptv1/ptv2
+    num_classes: int = 0          # >0 adds a trainable classification head
+
+
+def init(key, cfg, opt: PEFTOptions) -> Dict[str, Any]:
+    """Returns the PEFT param pytree (may be empty for ft/none)."""
+    m = opt.method
+    L, d = cfg.num_layers, cfg.d_model
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {}
+    if m == "aot":
+        assert cfg.aot_applicable or opt.aot.mode == "fused", (
+            f"{cfg.name}: AoT P-Tuning needs discrete input ids "
+            f"({cfg.aot_note}); choose another method")
+        params["aot"] = aot_mod.init(ks[0], cfg, opt.aot)
+    elif m == "bitfit":
+        params["bitfit"] = {
+            "attn_out": jnp.zeros((L, d), jnp.float32),
+            "mlp_out": jnp.zeros((L, d), jnp.float32),
+            "final": jnp.zeros((d,), jnp.float32),
+        }
+    elif m == "lora":
+        r = opt.lora_rank
+        params["lora"] = {
+            "qa": jax.vmap(lambda k: dense_init(k, (d, r)))(jax.random.split(ks[0], L)),
+            "qb": jnp.zeros((L, r, h * hd), jnp.float32),
+            "va": jax.vmap(lambda k: dense_init(k, (d, r)))(jax.random.split(ks[1], L)),
+            "vb": jnp.zeros((L, r, kvh * hd), jnp.float32),
+        }
+    elif m == "adapters":
+        r = opt.adapter_rank
+        def mk(key):
+            k1, k2 = jax.random.split(key)
+            return {"down": jax.vmap(lambda k: dense_init(k, (d, r)))(jax.random.split(k1, L)),
+                    "up": jnp.zeros((L, r, d), jnp.float32),
+                    "b1": jnp.zeros((L, r), jnp.float32),
+                    "b2": jnp.zeros((L, d), jnp.float32)}
+        params["adapters"] = {"attn": mk(ks[0]), "mlp": mk(ks[1])}
+    elif m == "ptv1":
+        params["ptv1"] = {"prompt": dense_init(ks[0], (opt.prompt_len, d), scale=0.02)}
+    elif m == "ptv2":
+        p = opt.prompt_len
+        params["ptv2"] = {
+            "pk": (jax.random.normal(ks[0], (L, p, kvh, hd)) * 0.02).astype(jnp.float32),
+            "pv": (jax.random.normal(ks[1], (L, p, kvh, hd)) * 0.02).astype(jnp.float32),
+        }
+    elif m in ("ft", "none"):
+        pass
+    else:
+        raise ValueError(m)
+    if opt.num_classes:
+        params["head"] = {"w": jnp.zeros((d, opt.num_classes), jnp.float32),
+                          "b": jnp.zeros((opt.num_classes,), jnp.float32)}
+    return params
+
+
+def make(params, opt: PEFTOptions) -> Dict[str, Any]:
+    """Bundle for model.forward."""
+    return {"method": opt.method, "params": params, "opt": opt}
+
+
+def lora_scale(opt: PEFTOptions) -> float:
+    return opt.lora_alpha / opt.lora_rank
+
+
+# ---------------------------------------------------------------------------
+# trainability masks (for the optimizer)
+# ---------------------------------------------------------------------------
+
+def backbone_trainable(opt: PEFTOptions) -> bool:
+    return opt.method == "ft"
+
+
+def fuse_lora_into(params, peft_params, cfg, opt: PEFTOptions):
+    """Serving-time LoRA fusion: W' = W + alpha/r * A B (per layer).
+
+    Returns a new backbone param pytree; zero-overhead single-task serving
+    (paper Table 1 "LoRA Fused" row).
+    """
+    from repro.models.model import layer_plan, _regroup
+
+    new = jax.tree.map(lambda x: x, params)
+    lora = peft_params["lora"]
+    s = lora_scale(opt)
+    groups = []
+    for gi, plan in enumerate(layer_plan(cfg)):
+        group = dict(new["groups"][gi])
+        U = len(plan.kinds)
+        for u, kind in enumerate(plan.kinds):
+            if kind != "attn":
+                continue
+            blk = dict(group[f"b{u}"])
+            attn = dict(blk["attn"])
+            qa = _regroup(lora["qa"], plan.start, plan.repeats, U)[:, u]
+            qb = _regroup(lora["qb"], plan.start, plan.repeats, U)[:, u]
+            va = _regroup(lora["va"], plan.start, plan.repeats, U)[:, u]
+            vb = _regroup(lora["vb"], plan.start, plan.repeats, U)[:, u]
+            dq = jnp.einsum("rdk,rkh->rdh", qa, qb) * s
+            dv = jnp.einsum("rdk,rkh->rdh", va, vb) * s
+            attn["wq"] = attn["wq"] + dq.astype(attn["wq"].dtype)
+            attn["wv"] = attn["wv"] + dv.astype(attn["wv"].dtype)
+            blk["attn"] = attn
+            group[f"b{u}"] = blk
+        groups.append(group)
+    new["groups"] = groups
+    return new

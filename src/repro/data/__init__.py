@@ -1,0 +1,3 @@
+from repro.data.tokenizer import ByteTokenizer  # noqa: F401
+from repro.data.pipeline import LMStream, input_batch_for  # noqa: F401
+from repro.data.tasks import ClassificationTask, make_task_suite  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.distrib import sharding  # noqa: F401

@@ -1,0 +1,134 @@
+"""Logical axis names for every parameter / batch / cache leaf.
+
+This is the single source of truth the dry-run, elastic resharding, and the
+pjit in/out shardings all read. Names resolve to mesh axes through the rule
+sets in ``distrib.sharding`` (TP over "model", DP over ("pod","data"), EP
+over "model", AoT fused tables over both).
+
+Dispatch is name-based on the param path — megatron-style column/row
+parallelism for attention and MLP, expert-dim sharding for MoE, LRU width
+for Griffin. xLSTM block params stay replicated (350M params; TP overhead
+would dominate — noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+N = None
+
+# (context, leaf) -> logical names (excluding the leading stacked-layer axis)
+_TABLE = {
+    ("attn", "wq"): (N, "heads"),
+    ("attn", "wk"): (N, "kv_heads"),
+    ("attn", "wv"): (N, "kv_heads"),
+    ("attn", "wo"): ("heads", N),
+    ("attn", "bq"): ("heads",),
+    ("attn", "bk"): ("kv_heads",),
+    ("attn", "bv"): ("kv_heads",),
+    ("mlp", "wg"): (N, "mlp"),
+    ("mlp", "wu"): (N, "mlp"),
+    ("mlp", "wd"): ("mlp", N),
+    ("mlp", "w1"): (N, "mlp"),
+    ("mlp", "w2"): ("mlp", N),
+    ("mlp", "b1"): ("mlp",),
+    ("moe", "router"): (N, "experts"),
+    ("moe", "wg"): ("experts", N, "mlp"),
+    ("moe", "wu"): ("experts", N, "mlp"),
+    ("moe", "wd"): ("experts", "mlp", N),
+    ("shared", "wg"): (N, "mlp"),
+    ("shared", "wu"): (N, "mlp"),
+    ("shared", "wd"): ("mlp", N),
+    ("rglru", "in_x"): (N, "lru"),
+    ("rglru", "in_gate"): (N, "lru"),
+    ("rglru", "conv_w"): (N, "lru"),
+    ("rglru", "conv_b"): ("lru",),
+    ("rglru", "gate_r"): ("heads", N, N),
+    ("rglru", "gate_i"): ("heads", N, N),
+    ("rglru", "gate_rb"): ("lru",),
+    ("rglru", "gate_ib"): ("lru",),
+    ("rglru", "lam"): ("lru",),
+    ("rglru", "out"): ("lru", N),
+    ("lora", "qb"): (N, "heads"),
+    ("lora", "vb"): (N, "kv_heads"),
+    ("ptv2", "pk"): (N, "kv_heads", N),
+    ("ptv2", "pv"): (N, "kv_heads", N),
+}
+
+_STACKED_CTX = ("attn", "mlp", "moe", "shared", "rglru", "core",
+                "aot", "lora", "ptv2", "adapters", "bitfit",
+                "ln1", "ln2")
+
+
+def logical_axes_for(path: Sequence[str], shape: Tuple[int, ...]
+                     ) -> Tuple[Optional[str], ...]:
+    """path: stringified key path; shape: leaf shape. Returns names per dim."""
+    parts = [p for p in path]
+    leaf = parts[-1]
+    ctx = None
+    for p in reversed(parts[:-1]):
+        if p in ("attn", "mlp", "moe", "shared", "rglru", "core", "aot",
+                 "lora", "ptv2", "adapters", "bitfit", "embed", "lm_head",
+                 "frontend", "ptv1", "head"):
+            ctx = p
+            break
+
+    # --- top-level tables ---
+    if ctx == "embed" and leaf == "tok":
+        return ("vocab", N)
+    if ctx == "embed" and leaf == "pos":
+        return (N, N)
+    if ctx == "lm_head":
+        return (N, "vocab")
+    if ctx == "aot" and leaf == "table":
+        if len(shape) == 4:          # (L, tasks, V, d)
+            return (N, N, "table_vocab", "table_embed")
+        return (N, "table_vocab", "table_embed")
+
+    # --- stacked per-layer params: leading axis is the layer/repeat dim ---
+    stacked = ctx in ("attn", "mlp", "moe", "shared", "rglru", "core",
+                      "lora", "ptv2", "aot", "adapters", "bitfit") or \
+        any(p.startswith("b") and p[1:].isdigit() for p in parts)
+    body = _TABLE.get((ctx, leaf))
+    if body is not None:
+        if stacked and len(shape) == len(body) + 1:
+            return (N,) + body
+        if len(shape) == len(body):
+            return body
+    return tuple(N for _ in shape)
+
+
+def batch_axes_for(name: str, shape: Tuple[int, ...]) -> Tuple[Optional[str], ...]:
+    if name in ("tokens", "labels", "loss_mask", "aot_ids"):
+        return ("batch",) + (N,) * (len(shape) - 1)
+    if name in ("frames", "patches"):
+        return ("batch",) + (N,) * (len(shape) - 1)
+    if name == "task_ids":
+        return ("batch",)
+    return tuple(N for _ in shape)
+
+
+def cache_axes_for(path: Sequence[str], shape: Tuple[int, ...]
+                   ) -> Tuple[Optional[str], ...]:
+    """Cache leaves: (R, b, ...). KV caches shard seq over 'cache_seq'."""
+    leaf = path[-1]
+    if leaf in ("k", "v") and len(shape) == 5:
+        return (N, "cache_batch", "cache_seq", "kv_heads", N)
+    if leaf == "conv":
+        return (N, "cache_batch") + (N,) * (len(shape) - 2)
+    if leaf == "h" and len(shape) == 3:
+        return (N, "cache_batch", "lru")
+    # mlstm/slstm states
+    return (N, "cache_batch") + (N,) * (len(shape) - 2)
+
+
+def path_strings(keypath) -> Tuple[str, ...]:
+    """jax.tree_util keypath -> plain strings."""
+    out = []
+    for k in keypath:
+        s = getattr(k, "key", None)
+        if s is None:
+            s = getattr(k, "idx", None)
+        if s is None:
+            s = getattr(k, "name", str(k))
+        out.append(str(s))
+    return tuple(out)

@@ -1,0 +1,182 @@
+"""Logical-axis sharding: flax-linen-style logical partitioning without flax.
+
+Model code annotates intermediates with *logical* axis names
+(``constrain(x, "batch", "seq", "embed")``). A rule set maps logical names to
+mesh axis names. Outside a mesh/rules context the annotation is a no-op, so
+the same model code runs on one CPU device and on the 512-chip production
+mesh.
+
+Rules are installed with :func:`use_rules` (a context manager) together with
+an active ``jax.sharding.Mesh``. Non-divisible dims are left unsharded (the
+helper validates divisibility where the dim size is known at trace time),
+which mirrors what a production system does when e.g. 8 KV heads meet a
+16-way tensor axis.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def _current() -> Tuple[Optional[Mesh], Dict[str, AxisVal]]:
+    return getattr(_state, "mesh", None), getattr(_state, "rules", {})
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Optional[Mesh], rules: Dict[str, AxisVal]):
+    """Install (mesh, logical->mesh rules) for the enclosed trace."""
+    old = _current()
+    _state.mesh, _state.rules = mesh, dict(rules)
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = old
+
+
+def _axis_size(mesh: Mesh, axis: AxisVal) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis]
+    n = 1
+    for a in axis:
+        n *= mesh.shape[a]
+    return n
+
+
+def spec_for(names: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None,
+             mesh: Optional[Mesh] = None,
+             rules: Optional[Dict[str, AxisVal]] = None) -> P:
+    """Resolve logical names to a PartitionSpec under the current rules."""
+    if mesh is None or rules is None:
+        mesh, rules = _current()
+    if mesh is None:
+        return P()
+    used = set()
+    out = []
+    for i, name in enumerate(names):
+        ax = rules.get(name) if name is not None else None
+        if ax is not None:
+            # a mesh axis may appear only once in a spec
+            flat = (ax,) if isinstance(ax, str) else tuple(ax)
+            if any(a in used for a in flat):
+                ax = None
+            elif shape is not None and shape[i] % _axis_size(mesh, ax) != 0:
+                ax = None           # non-divisible: leave replicated
+            else:
+                used.update(flat)
+        out.append(ax)
+    return P(*out)
+
+
+def data_group_count() -> int:
+    """Size of the mesh axes the 'batch' logical axis maps to (1 if none).
+
+    Used by grouped-dispatch MoE: tokens are dispatched within each
+    data-parallel group so expert work divides across BOTH mesh axes.
+    """
+    mesh, rules = _current()
+    if mesh is None:
+        return 1
+    ax = rules.get("batch")
+    if ax is None:
+        return 1
+    return _axis_size(mesh, ax)
+
+
+def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Annotate ``x`` with logical axis names; no-op without active rules."""
+    mesh, rules = _current()
+    if mesh is None:
+        return x
+    assert x.ndim == len(names), (x.shape, names)
+    spec = spec_for(names, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, rules: Dict[str, AxisVal],
+                   names: Sequence[Optional[str]],
+                   shape: Optional[Sequence[int]] = None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(names, shape, mesh, rules))
+
+
+# ---------------------------------------------------------------------------
+# Standard rule sets
+# ---------------------------------------------------------------------------
+
+def tp_dp_rules(*, pod_axis: bool = False, sequence_parallel: bool = False,
+                shard_vocab_tables: bool = True) -> Dict[str, AxisVal]:
+    """The production rule set: DP over (pod,)data, TP/EP over model.
+
+    ``sequence_parallel`` additionally shards the sequence axis of activations
+    over the model axis between attention/MLP regions (used by the perf climb).
+    """
+    data: AxisVal = ("pod", "data") if pod_axis else "data"
+    rules: Dict[str, AxisVal] = {
+        "batch": data,
+        "seq": "model" if sequence_parallel else None,
+        "kv_seq": None,
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_capacity": None,
+        "lru": "model",
+        "layers": None,
+        "prompt": None,
+        "classes": None,
+        # AoT fused tables: vocab rows over data, embed over model — keeps a
+        # 48x202k x 5120 table set at < 0.5 GB/device (DESIGN.md §3)
+        "table_vocab": data,
+        "table_embed": "model",
+        # decode cache: batch over data, kv heads over model; when batch=1
+        # (long_500k) the cache seq axis takes the data axis instead
+        "cache_batch": data,
+        "cache_seq": None,
+        "rank": None,
+    }
+    return rules
+
+
+def long_context_rules(**kw) -> Dict[str, AxisVal]:
+    """batch=1 decode: shard the KV-cache/sequence over the data axis."""
+    rules = tp_dp_rules(**kw)
+    rules["cache_batch"] = None
+    rules["cache_seq"] = "data" if not kw.get("pod_axis") else ("pod", "data")
+    return rules
+
+
+def decode_rules(*, kv_heads: int, pod_axis: bool = False) -> Dict[str, AxisVal]:
+    """Batched decode. When kv_heads doesn't divide the model axis the KV
+    cache would replicate across it (e.g. qwen2.5's 8 kv heads on a 16-way
+    axis -> 16x cache residency+read bytes); shard the cache SEQUENCE over
+    the model axis instead — softmax over the sharded axis costs only a
+    scalar-sized all-reduce per step (EXPERIMENTS §Perf, decode cell)."""
+    rules = tp_dp_rules(pod_axis=pod_axis)
+    model = 16  # production model-axis width; validated by spec_for divisibility
+    if kv_heads % model:
+        rules["kv_heads"] = None
+        rules["cache_seq"] = "model"
+    return rules
+
+
+def param_sharding_names(path: Tuple[str, ...], leaf: np.ndarray) -> Tuple[Optional[str], ...]:
+    """Fallback logical names for a param leaf by name heuristics.
+
+    The model substrate attaches explicit logical names (see
+    ``models.model.param_logical_axes``); this is only the generic fallback.
+    """
+    return tuple(None for _ in leaf.shape)

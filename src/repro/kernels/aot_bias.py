@@ -1,0 +1,79 @@
+"""Pallas TPU kernel for the paper's hot path: fused gather + add (Eq. 1).
+
+``H + P[x]`` — the naive XLA lowering materializes the gathered rows
+``P[x]`` (T x d) in HBM before the add (2 extra HBM round-trips of the
+activation size). This kernel uses **scalar prefetch**: the token ids are
+prefetched into SMEM, and each grid step's BlockSpec index_map selects the
+needed row of ``P`` directly — the row is DMA'd HBM->VMEM and added
+in-register, one pass over ``H``, zero intermediate HBM traffic. This is the
+TPU-native version of the paper's "only rows of P are placed in GPU memory".
+
+A multi-task variant indexes ``(task_id, token_id)`` — the paper's
+multi-task batched inference with one fused kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, h_ref, p_ref, o_ref):
+    del ids_ref
+    o_ref[...] = h_ref[...] + p_ref[...].astype(h_ref.dtype)
+
+
+def aot_gather_add_kernel(h, table, ids, *, block_t: int = 1, interpret=False):
+    """h: (T, d); table: (V, d); ids: (T,) int32 -> (T, d).
+
+    Grid is one step per token row; ids are scalar-prefetched so the
+    BlockSpec index_map DMAs exactly ``P[ids[t]]`` per step.
+    """
+    T, d = h.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda t, ids: (t, 0)),
+            pl.BlockSpec((1, d), lambda t, ids: (ids[t], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda t, ids: (t, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, d), h.dtype),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), h, table)
+
+
+def _kernel_mt(sc_ref, h_ref, p_ref, o_ref):
+    del sc_ref
+    o_ref[...] = h_ref[...] + p_ref[0].astype(h_ref.dtype)
+
+
+def aot_gather_add_multitask_kernel(h, tables, task_ids, ids, *,
+                                    interpret=False):
+    """h: (T, d); tables: (n_tasks, V, d); task_ids/ids: (T,) -> (T, d).
+
+    One scalar-prefetch array carries (task, token) pairs; the P BlockSpec
+    index_map picks the (task, row) slice per step.
+    """
+    T, d = h.shape
+    sc = jnp.stack([task_ids.astype(jnp.int32), ids.astype(jnp.int32)], axis=0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda t, sc: (t, 0)),
+            pl.BlockSpec((1, 1, d), lambda t, sc: (sc[0, t], sc[1, t], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda t, sc: (t, 0)),
+    )
+    return pl.pallas_call(
+        _kernel_mt,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, d), h.dtype),
+        interpret=interpret,
+    )(sc, h, tables)

@@ -1,0 +1,98 @@
+"""Pallas TPU flash-decode: single-token attention against a long KV cache.
+
+Decode is bandwidth-bound (the whole cache is read once per token), so the
+kernel streams the cache in ``block_k`` tiles with online-softmax state in
+VMEM scratch. The KV sequence axis is the innermost (sequential) grid axis;
+blocks past ``cur_len`` are skipped with ``pl.when`` so a part-full cache
+costs only the bytes actually resident — this is what the decode_32k /
+long_500k roofline cells exercise.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            sm_scale, block_k, nk):
+    ki = pl.program_id(1)
+    cur_len = len_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(ki * block_k < cur_len)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                    # (g, hd)
+        k = k_ref[0].astype(jnp.float32)                    # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+        kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < cur_len, s, NEG)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k_cache, v_cache, cur_len, *, sm_scale=None,
+                            block_k=256, interpret=False):
+    """q: (b, h, hd); caches: (b, S, kvh, hd); cur_len: scalar int32."""
+    b, h, hd = q.shape
+    S, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(hd)
+    block_k = min(block_k, S)
+    pad = (-S) % block_k
+    kk = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k_cache
+    vv = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else v_cache
+    Sp = S + pad
+    nk = Sp // block_k
+
+    qf = q.reshape(b, kvh, g, hd).reshape(b * kvh, g, hd)
+    kf = kk.transpose(0, 2, 1, 3).reshape(b * kvh, Sp, hd)
+    vf = vv.transpose(0, 2, 1, 3).reshape(b * kvh, Sp, hd)
+    lens = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (1,))
+
+    kern = functools.partial(_kernel, sm_scale=scale, block_k=block_k, nk=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b * kvh, nk),
+        in_specs=[
+            pl.BlockSpec((1, g, hd), lambda bh, ki, lens: (bh, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, ki, lens: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, ki, lens: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, hd), lambda bh, ki, lens: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * kvh, g, hd), q.dtype),
+        interpret=interpret,
+    )(lens, qf, kf, vf)
+    return out.reshape(b, kvh * g, hd)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each oracle is the semantic ground truth the TPU kernels must match in
+``interpret=True`` mode (and on hardware). Tests sweep shapes/dtypes and
+assert_allclose kernel-vs-oracle.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, sm_scale=None):
+    """q: (b, sq, h, hd); k/v: (b, skv, kvh, hd). GQA by head grouping."""
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(hd)
+    q5 = q.reshape(b, sq, kvh, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q5, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+    return o.reshape(b, sq, h, hd)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cur_len, *, sm_scale=None):
+    """q: (b, h, hd); caches (b, S, kvh, hd); cur_len: scalar valid length."""
+    b, h, hd = q.shape
+    S, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(hd)
+    q4 = q.reshape(b, kvh, g, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", q4, k_cache).astype(jnp.float32) * scale
+    ok = jnp.arange(S) < cur_len
+    s = jnp.where(ok[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(b, h, hd)
+
+
+def aot_gather_add_ref(h, table, ids):
+    """The paper's Eq. 1 hot path: H + P[x].
+
+    h: (T, d); table: (V, d); ids: (T,) int32 -> (T, d).
+    """
+    return h + jnp.take(table, ids, axis=0).astype(h.dtype)
+
+
+def aot_gather_add_multitask_ref(h, tables, task_ids, ids):
+    """h: (T, d); tables: (n_tasks, V, d); task_ids/ids: (T,) -> (T, d)."""
+    return h + tables[task_ids, ids].astype(h.dtype)

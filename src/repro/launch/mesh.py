@@ -1,0 +1,35 @@
+"""Production meshes. Importing this module never touches jax device state.
+
+Single pod: v5e-256 as (data=16, model=16) — TP within the 16-chip ICI ring
+dimension, DP across the other. Multi-pod: 2 pods = 512 chips as
+(pod=2, data=16, model=16); the pod axis is an outer data axis whose
+gradient all-reduce crosses DCN.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    assert len(devs) >= n, (
+        f"need {n} devices for mesh {shape}; have {len(devs)}. Run under "
+        f"XLA_FLAGS=--xla_force_host_platform_device_count={n} (dryrun.py sets this).")
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh from the available devices (tests, elastic rescale)."""
+    import jax
+    from jax.sharding import Mesh
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    assert len(devs) >= n, (n, len(devs))
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)

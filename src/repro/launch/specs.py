@@ -1,0 +1,113 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` produces the batch specs for a cell;
+``param_specs`` / ``peft_specs`` / ``state_specs`` build the weight-side
+specs via ``jax.eval_shape`` and attach NamedShardings from the logical-axis
+tables. The dry-run lowers against these, which is how a 400B-param config
+is exercised on a laptop-class host.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.core import aot as aot_mod
+from repro.core import peft as peft_mod
+from repro.distrib import axes as axlib
+from repro.distrib import sharding as shlib
+from repro.models.model import Model
+
+
+def _with_sharding(spec_tree, mesh: Optional[Mesh], rules, names_fn):
+    """Attach NamedShardings to a ShapeDtypeStruct pytree."""
+    if mesh is None:
+        return spec_tree
+
+    def attach(keypath, s):
+        path = axlib.path_strings(keypath)
+        names = names_fn(path, tuple(s.shape))
+        pspec = shlib.spec_for(names, s.shape, mesh, rules)
+        return jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                    sharding=NamedSharding(mesh, pspec))
+
+    return jax.tree_util.tree_map_with_path(attach, spec_tree)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, mesh=None, rules=None,
+                dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Batch specs for one (arch x shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {}
+    if shape.kind == "decode":
+        if cfg.frontend == "audio_frames":
+            raise ValueError(f"{cfg.name} is encoder-only; no decode shapes")
+        specs["tokens"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    elif cfg.frontend == "audio_frames":
+        specs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), dtype)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if cfg.frontend == "vision_patches":
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_len, cfg.frontend_dim), dtype)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return _with_sharding(
+        specs, mesh, rules,
+        lambda path, shp: axlib.batch_axes_for(path[-1], shp))
+
+
+def param_specs(model: Model, mesh=None, rules=None):
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    # backbone params live in compute dtype on device (frozen bf16 residency)
+    dt = model.opts.param_dtype
+    shapes = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dt), shapes)
+    return _with_sharding(shapes, mesh, rules, axlib.logical_axes_for)
+
+
+def peft_specs(model: Model, popt: peft_mod.PEFTOptions, mesh=None, rules=None):
+    shapes = jax.eval_shape(
+        lambda k: peft_mod.init(k, model.cfg, popt), jax.random.PRNGKey(0))
+    return _with_sharding(shapes, mesh, rules, axlib.logical_axes_for)
+
+
+def fused_table_specs(model: Model, n_tasks: int = 1, mesh=None, rules=None,
+                      dtype=jnp.bfloat16):
+    cfg = model.cfg
+    L, V, d = cfg.num_layers, cfg.vocab_size, cfg.d_model
+    shape = (L, V, d) if n_tasks == 1 else (L, n_tasks, V, d)
+    spec = {"aot": {"table": jax.ShapeDtypeStruct(shape, dtype)}}
+    return _with_sharding(spec, mesh, rules, axlib.logical_axes_for)
+
+
+def cache_specs(model: Model, batch: int, max_len: int, mesh=None, rules=None,
+                dtype=None):
+    specs = model.cache_specs(batch, max_len)
+    return _with_sharding(specs, mesh, rules, axlib.cache_axes_for)
+
+
+def state_specs(init_state_fn, trainable_specs, mesh=None, rules=None):
+    shapes = jax.eval_shape(init_state_fn, trainable_specs)
+    return _with_sharding(shapes, mesh, rules, axlib.logical_axes_for)
+
+
+def rng_spec(mesh=None, rules=None):
+    s = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    if mesh is None:
+        return s
+    return jax.ShapeDtypeStruct(
+        s.shape, s.dtype,
+        sharding=NamedSharding(mesh, shlib.spec_for([None] * len(s.shape),
+                                                    s.shape, mesh, rules)))
+
+
+def scalar_spec(mesh=None, rules=None, dtype=jnp.int32):
+    if mesh is None:
+        return jax.ShapeDtypeStruct((), dtype)
+    from jax.sharding import PartitionSpec as P
+    return jax.ShapeDtypeStruct((), dtype, sharding=NamedSharding(mesh, P()))

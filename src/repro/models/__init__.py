@@ -1,0 +1,2 @@
+# model.py import is deferred: submodules are imported directly
+# (repro.models.layers, repro.models.model, ...) to avoid import cycles.

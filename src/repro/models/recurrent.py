@@ -1,0 +1,128 @@
+"""Griffin/RecurrentGemma recurrent block: causal conv + RG-LRU gated recurrence.
+
+Training uses ``jax.lax.associative_scan`` over the linear recurrence
+``h_t = a_t * h_{t-1} + b_t`` (log-parallel depth); decode is a single-step
+state update. Gates use block-diagonal (per-head) projections as in Griffin.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distrib.sharding import constrain
+from repro.models.layers import dense_init
+
+_C_MAX = 8.0   # RG-LRU gate exponent scale (Griffin's c)
+
+
+def rglru_init(key, cfg):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    H = cfg.num_heads
+    blk = w // H
+    ks = jax.random.split(key, 8)
+    # a in [0.9, 0.999] at init: Lambda = -log(exp(-nu)) parametrization:
+    # a = sigmoid(lam) ** (c * r). Init lam so sigmoid(lam)^c spans ~[.9,.999]
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9 ** (1 / _C_MAX), 0.999 ** (1 / _C_MAX))
+    lam = jnp.log(u) - jnp.log1p(-u)
+    return {
+        "in_x": dense_init(ks[1], (d, w)),
+        "in_gate": dense_init(ks[2], (d, w)),
+        "conv_w": dense_init(ks[3], (cfg.conv_width, w), scale=1.0 / math.sqrt(cfg.conv_width)),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "gate_r": dense_init(ks[4], (H, blk, blk)),
+        "gate_i": dense_init(ks[5], (H, blk, blk)),
+        "gate_rb": jnp.zeros((w,), jnp.float32),
+        "gate_ib": jnp.zeros((w,), jnp.float32),
+        "lam": lam,
+        "out": dense_init(ks[6], (w, d)),
+    }
+
+
+def _conv1d_causal(w, b, x, state: Optional[jax.Array]):
+    """Depthwise causal conv, width K. x: (b, s, w). state: (b, K-1, w) or None.
+
+    Returns (y, new_state). new_state is the last K-1 inputs (for decode).
+    """
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (K - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return y, new_state
+
+
+def _block_linear(wt, bias, x, H):
+    """Per-head block-diagonal linear. x: (b, s, w); wt: (H, blk, blk)."""
+    b, s, w = x.shape
+    blk = w // H
+    xh = x.reshape(b, s, H, blk)
+    y = jnp.einsum("bshi,hij->bshj", xh, wt.astype(x.dtype))
+    return y.reshape(b, s, w) + bias.astype(x.dtype)
+
+
+def _gates(p, xc, H):
+    """r, i gates and the log recurrence weight. xc: (b, s, w) conv output."""
+    r = jax.nn.sigmoid(_block_linear(p["gate_r"], p["gate_rb"], xc, H).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_linear(p["gate_i"], p["gate_ib"], xc, H).astype(jnp.float32))
+    log_a = -_C_MAX * r * jax.nn.softplus(-p["lam"])   # log sigmoid(lam)*c*r <= 0
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) multiplier on the gated input (Griffin eq. 5)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, mult * i
+
+
+def rglru_scan(a, bterm, h0: Optional[jax.Array] = None):
+    """h_t = a_t h_{t-1} + b_t via associative scan. a/b: (b, s, w) fp32."""
+    if h0 is not None:
+        # fold initial state into the first step
+        bterm = bterm.at[:, 0].add(a[:, 0] * h0)
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+    return h
+
+
+def apply_rglru(cfg, p, x, dtype, cache: Optional[dict] = None):
+    """Griffin recurrent temporal-mixing sublayer.
+
+    x: (b, s, d) normed input. cache: {"conv": (b,K-1,w), "h": (b,w)} or None.
+    Returns (out (b,s,d), new_cache).
+    """
+    H = cfg.num_heads
+    xin = x.astype(dtype)
+    gate = jax.nn.gelu(xin @ p["in_gate"].astype(dtype))
+    xr = xin @ p["in_x"].astype(dtype)
+    xr = constrain(xr, "batch", "seq", "lru")
+    gate = constrain(gate, "batch", "seq", "lru")
+    xc, conv_state = _conv1d_causal(p["conv_w"], p["conv_b"], xr,
+                                    cache["conv"] if cache else None)
+    a, imult = _gates(p, xc, H)                       # fp32 (b, s, w)
+    bterm = imult * xc.astype(jnp.float32)
+    if cache is not None and x.shape[1] == 1:
+        h_prev = cache["h"].astype(jnp.float32)
+        h = a[:, 0] * h_prev + bterm[:, 0]
+        hs = h[:, None]
+        new_cache = {"conv": conv_state, "h": h.astype(dtype)}
+    else:
+        h0 = cache["h"].astype(jnp.float32) if cache else None
+        hs = rglru_scan(a, bterm, h0)
+        new_cache = {"conv": conv_state, "h": hs[:, -1].astype(dtype)}
+    y = hs.astype(dtype) * gate
+    out = y @ p["out"].astype(dtype)
+    return constrain(out, "batch", "seq", "embed"), new_cache
+
+
+def rglru_init_cache(cfg, batch: int, dtype):
+    w = cfg.lru_width or cfg.d_model
+    return {"conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+            "h": jnp.zeros((batch, w), dtype)}

@@ -1,0 +1,330 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM training uses a *chunkwise-parallel* form — intra-chunk quadratic
+attention-like compute + inter-chunk recurrent state, all with log-space
+stabilization of the exponential gates (the xLSTM paper's stabilizer m).
+Decode is the O(1) recurrent step. A pure step-by-step recurrence
+(`mlstm_recurrent`) serves as the oracle for property tests: chunkwise output
+must match it for every chunk size.
+
+sLSTM has true hidden-to-hidden recurrence (gates see h_{t-1}), so training
+scans sequentially over time — that is inherent to the architecture.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distrib.sharding import constrain
+from repro.models.layers import dense_init
+from repro.models.recurrent import _conv1d_causal
+
+NEG = -1e30
+
+
+# ===========================================================================
+# mLSTM core
+# ===========================================================================
+
+def _mlstm_chunk(q, k, v, i_log, f_log, state):
+    """One chunk of stabilized chunkwise mLSTM (single head, batched).
+
+    q,k,v: (b, C, hd); i_log,f_log: (b, C); state = (Cm (b,hd,hd), n (b,hd), m (b,))
+    Returns (h (b,C,hd), new_state).
+    """
+    bsz, C, hd = q.shape
+    Cm, n, m = state
+    scale = 1.0 / math.sqrt(hd)
+
+    b_cum = jnp.cumsum(f_log, axis=1)                    # (b, C) inclusive
+    F = b_cum[:, -1]                                     # (b,)
+    # intra weights w_ij = b_i - b_j + i_log_j  (j <= i)
+    w = b_cum[:, :, None] - b_cum[:, None, :] + i_log[:, None, :]
+    tri = jnp.tril(jnp.ones((C, C), bool))
+    w = jnp.where(tri[None], w, NEG)
+    inter_w = b_cum + m[:, None]                         # (b, C)
+    m_i = jnp.maximum(w.max(axis=2), inter_w)            # (b, C)
+    m_i = jnp.maximum(m_i, -m_i * 0 + (-1e30))           # keep finite
+
+    D = jnp.exp(w - m_i[:, :, None])                     # (b, C, C)
+    S = jnp.einsum("bih,bjh->bij", q, k) * scale * D
+    inter_scale = jnp.exp(inter_w - m_i)                 # (b, C)
+    num = jnp.einsum("bij,bjh->bih", S, v) + \
+        jnp.einsum("bih,bhg->big", q, Cm) * scale * inter_scale[:, :, None]
+    den = S.sum(axis=2) + jnp.einsum("bih,bh->bi", q, n) * scale * inter_scale
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[:, :, None]
+
+    # state update
+    up_w = i_log + (F[:, None] - b_cum)                  # (b, C): i_j + sum_{k>j} f_k
+    m_new = jnp.maximum(F + m, up_w.max(axis=1))
+    decay = jnp.exp(F + m - m_new)                       # (b,)
+    up = jnp.exp(up_w - m_new[:, None])                  # (b, C)
+    Cm_new = decay[:, None, None] * Cm + jnp.einsum("bj,bjh,bjg->bhg", up, k, v)
+    n_new = decay[:, None] * n + jnp.einsum("bj,bjh->bh", up, k)
+    return h, (Cm_new, n_new, m_new)
+
+
+def mlstm_chunkwise(q, k, v, i_raw, f_raw, state=None, chunk: int = 64,
+                    unroll: bool = False):
+    """Multi-head chunkwise mLSTM. q,k,v: (b, s, H, hd); i/f_raw: (b, s, H).
+
+    Returns (h (b,s,H,hd), state). State: (C (b,H,hd,hd), n (b,H,hd), m (b,H)).
+    Everything fp32 internally.
+    """
+    b, s, H, hd = q.shape
+    f_log = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    i_log = i_raw.astype(jnp.float32)
+    if state is None:
+        state = (jnp.zeros((b, H, hd, hd), jnp.float32),
+                 jnp.zeros((b, H, hd), jnp.float32),
+                 jnp.full((b, H), -1e30, jnp.float32))
+    # fold (b, H) into a single batch dim for the single-head kernel
+    def fold(x):   # (b, s, H, ...) -> (b*H, s, ...)
+        return jnp.moveaxis(x, 2, 1).reshape((b * H, s) + x.shape[3:])
+    qf, kf, vf = fold(q.astype(jnp.float32)), fold(k.astype(jnp.float32)), fold(v.astype(jnp.float32))
+    ilf = jnp.moveaxis(i_log, 2, 1).reshape(b * H, s)
+    flf = jnp.moveaxis(f_log, 2, 1).reshape(b * H, s)
+    st = (state[0].reshape(b * H, hd, hd), state[1].reshape(b * H, hd),
+          state[2].reshape(b * H))
+
+    C = min(chunk, s)
+    if s % C:
+        C = s  # fallback: one chunk (callers pick divisible chunks)
+    nch = s // C
+
+    def body(carry, xs):
+        qc, kc, vc, ic, fc = xs
+        h, new = _mlstm_chunk(qc, kc, vc, ic, fc, carry)
+        return new, h
+
+    xs = tuple(x.reshape(b * H, nch, C, *x.shape[2:]).swapaxes(0, 1)
+               for x in (qf, kf, vf, ilf, flf))
+    if unroll:
+        # python loop: honest HLO flop counting for the dry-run (lax.scan
+        # bodies are costed once by XLA's analysis, not x trip-count)
+        hs_list = []
+        ck = jax.checkpoint(lambda c, x: body(c, x))
+        for i in range(nch):
+            st, hi = ck(st, tuple(x[i] for x in xs))
+            hs_list.append(hi)
+        hs = jnp.stack(hs_list, axis=0)
+    else:
+        st, hs = jax.lax.scan(jax.checkpoint(body), st, xs)
+    h = hs.swapaxes(0, 1).reshape(b * H, s, hd)
+    h = jnp.moveaxis(h.reshape(b, H, s, hd), 1, 2)
+    state = (st[0].reshape(b, H, hd, hd), st[1].reshape(b, H, hd),
+             st[2].reshape(b, H))
+    return h, state
+
+
+def mlstm_recurrent(q, k, v, i_raw, f_raw, state=None):
+    """Step-by-step oracle (and decode path when s==1). Same signature."""
+    b, s, H, hd = q.shape
+    if state is None:
+        state = (jnp.zeros((b, H, hd, hd), jnp.float32),
+                 jnp.zeros((b, H, hd), jnp.float32),
+                 jnp.full((b, H), -1e30, jnp.float32))
+    scale = 1.0 / math.sqrt(hd)
+    f_log = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    i_log = i_raw.astype(jnp.float32)
+
+    def step(carry, xs):
+        Cm, n, m = carry
+        qt, kt, vt, it, ft = xs      # (b,H,hd), ..., (b,H)
+        m_new = jnp.maximum(ft + m, it)
+        decay = jnp.exp(ft + m - m_new)
+        inp = jnp.exp(it - m_new)
+        Cm = decay[..., None, None] * Cm + inp[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :])
+        n = decay[..., None] * n + inp[..., None] * kt
+        num = jnp.einsum("bhd,bhdg->bhg", qt, Cm) * scale
+        den = jnp.einsum("bhd,bhd->bh", qt, n) * scale
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+        return (Cm, n, m_new), h
+
+    # time-major xs
+    def tm(x):
+        return jnp.moveaxis(x.astype(jnp.float32), 1, 0)
+    state, hs = jax.lax.scan(step, state, (tm(q), tm(k), tm(v), tm(i_log), tm(f_log)))
+    return jnp.moveaxis(hs, 0, 1), state
+
+
+# ===========================================================================
+# mLSTM block (xLSTM paper Fig. 10-style, proj factor 2)
+# ===========================================================================
+
+def mlstm_block_init(key, cfg):
+    d = cfg.d_model
+    di = 2 * d
+    H = cfg.num_heads
+    hd = di // H
+    ks = jax.random.split(key, 10)
+    return {
+        "up": dense_init(ks[0], (d, 2 * di)),          # -> (x_up, z gate)
+        "conv_w": dense_init(ks[1], (cfg.conv_width, di), scale=0.5),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "wq": dense_init(ks[2], (di, di)),
+        "wk": dense_init(ks[3], (di, di)),
+        "wv": dense_init(ks[4], (di, di)),
+        "w_i": dense_init(ks[5], (di, H), scale=0.01),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "w_f": dense_init(ks[6], (di, H), scale=0.01),
+        "b_f": jnp.linspace(3.0, 6.0, H).astype(jnp.float32),   # open forget gates
+        "gn_scale": jnp.ones((di,), jnp.float32),
+        "down": dense_init(ks[7], (di, d)),
+        "w_o": dense_init(ks[8], (di, di), scale=0.01),
+        "b_o": jnp.zeros((di,), jnp.float32),
+    }
+
+
+def _group_norm(x, scale, H, eps=1e-6):
+    """Per-head group norm over the head dim. x: (b, s, di)."""
+    b, s, di = x.shape
+    xh = x.reshape(b, s, H, di // H).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    y = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (y.reshape(b, s, di) * scale).astype(x.dtype)
+
+
+def apply_mlstm_block(cfg, p, x, dtype, cache=None, chunk: int = 64,
+                      unroll: bool = False):
+    """x: (b, s, d) normed input. cache: {"conv", "state"} or None."""
+    b, s, d = x.shape
+    H = cfg.num_heads
+    di = 2 * d
+    hd = di // H
+    xin = x.astype(dtype)
+    up = xin @ p["up"].astype(dtype)
+    x_up, z = jnp.split(up, 2, axis=-1)
+    xc, conv_state = _conv1d_causal(p["conv_w"], p["conv_b"], x_up,
+                                    cache["conv"] if cache else None)
+    xc = jax.nn.silu(xc)
+    q = (xc @ p["wq"].astype(dtype)).reshape(b, s, H, hd)
+    k = (xc @ p["wk"].astype(dtype)).reshape(b, s, H, hd)
+    v = (x_up @ p["wv"].astype(dtype)).reshape(b, s, H, hd)
+    i_raw = xc @ p["w_i"].astype(dtype) + p["b_i"].astype(dtype)     # (b, s, H)
+    f_raw = xc @ p["w_f"].astype(dtype) + p["b_f"].astype(dtype)
+    st = cache["state"] if cache else None
+    if cache is not None and s == 1:
+        h, st = mlstm_recurrent(q, k, v, i_raw, f_raw, st)
+    else:
+        h, st = mlstm_chunkwise(q, k, v, i_raw, f_raw, st, chunk=chunk,
+                                unroll=unroll)
+    o = jax.nn.sigmoid((x_up @ p["w_o"].astype(dtype) + p["b_o"].astype(dtype))
+                       .astype(jnp.float32)).astype(dtype)
+    hflat = h.reshape(b, s, di).astype(dtype) * o
+    y = _group_norm(hflat, p["gn_scale"], H)
+    y = y * jax.nn.silu(z)
+    out = y @ p["down"].astype(dtype)
+    new_cache = {"conv": conv_state, "state": st}
+    return constrain(out, "batch", "seq", "embed"), new_cache
+
+
+def mlstm_init_cache(cfg, batch: int, dtype):
+    d = cfg.d_model
+    di = 2 * d
+    H = cfg.num_heads
+    hd = di // H
+    return {"conv": jnp.zeros((batch, cfg.conv_width - 1, di), dtype),
+            "state": (jnp.zeros((batch, H, hd, hd), jnp.float32),
+                      jnp.zeros((batch, H, hd), jnp.float32),
+                      jnp.full((batch, H), -1e30, jnp.float32))}
+
+
+# ===========================================================================
+# sLSTM block — true recurrence (gates see h_{t-1}); sequential scan.
+# ===========================================================================
+
+def slstm_block_init(key, cfg):
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    ks = jax.random.split(key, 12)
+    f_up = int(d * 4 / 3)
+    return {
+        "conv_w": dense_init(ks[0], (cfg.conv_width, d), scale=0.5),
+        "conv_b": jnp.zeros((d,), jnp.float32),
+        # input projections for gates z,i,f,o
+        "w_z": dense_init(ks[1], (d, d)), "w_i": dense_init(ks[2], (d, d)),
+        "w_f": dense_init(ks[3], (d, d)), "w_o": dense_init(ks[4], (d, d)),
+        # block-diagonal recurrent projections (per head)
+        "r_z": dense_init(ks[5], (H, hd, hd)), "r_i": dense_init(ks[6], (H, hd, hd)),
+        "r_f": dense_init(ks[7], (H, hd, hd)), "r_o": dense_init(ks[8], (H, hd, hd)),
+        "b_z": jnp.zeros((d,), jnp.float32), "b_i": jnp.zeros((d,), jnp.float32),
+        "b_f": jnp.linspace(3.0, 6.0, d).astype(jnp.float32),
+        "b_o": jnp.zeros((d,), jnp.float32),
+        "gn_scale": jnp.ones((d,), jnp.float32),
+        "up1": dense_init(ks[9], (d, f_up)),
+        "up2": dense_init(ks[10], (d, f_up)),
+        "down": dense_init(ks[11], (f_up, d)),
+    }
+
+
+def _rdot(r, h, H):
+    """Block-diagonal recurrent matmul. h: (b, d) fp32."""
+    b, d = h.shape
+    hd = d // H
+    return jnp.einsum("bhi,hij->bhj", h.reshape(b, H, hd), r).reshape(b, d)
+
+
+def _slstm_scan(p, x_z, x_i, x_f, x_o, H, state):
+    """state: dict(h, c, n, m) each (b, d) fp32. Inputs (b, s, d) fp32."""
+    def step(carry, xs):
+        h, c, n, m = carry
+        xz, xi, xf, xo = xs
+        z = jnp.tanh(xz + _rdot(p["r_z"].astype(jnp.float32), h, H))
+        i_raw = xi + _rdot(p["r_i"].astype(jnp.float32), h, H)
+        f_raw = xf + _rdot(p["r_f"].astype(jnp.float32), h, H)
+        o = jax.nn.sigmoid(xo + _rdot(p["r_o"].astype(jnp.float32), h, H))
+        f_log = jax.nn.log_sigmoid(f_raw)
+        m_new = jnp.maximum(f_log + m, i_raw)
+        fhat = jnp.exp(f_log + m - m_new)
+        ihat = jnp.exp(i_raw - m_new)
+        c_new = fhat * c + ihat * z
+        n_new = fhat * n + ihat
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    tm = lambda a: jnp.moveaxis(a, 1, 0)
+    carry = (state["h"], state["c"], state["n"], state["m"])
+    carry, hs = jax.lax.scan(step, carry, (tm(x_z), tm(x_i), tm(x_f), tm(x_o)))
+    new_state = dict(zip(("h", "c", "n", "m"), carry))
+    return jnp.moveaxis(hs, 0, 1), new_state
+
+
+def apply_slstm_block(cfg, p, x, dtype, cache=None):
+    """x: (b, s, d) normed input. cache: {"conv", "state"} or None."""
+    b, s, d = x.shape
+    H = cfg.num_heads
+    xin = x.astype(dtype)
+    xc, conv_state = _conv1d_causal(p["conv_w"], p["conv_b"], xin,
+                                    cache["conv"] if cache else None)
+    xc = jax.nn.silu(xc)
+    f32 = jnp.float32
+    x_z = (xin @ p["w_z"].astype(dtype) + p["b_z"].astype(dtype)).astype(f32)
+    x_o = (xin @ p["w_o"].astype(dtype) + p["b_o"].astype(dtype)).astype(f32)
+    x_i = (xc @ p["w_i"].astype(dtype) + p["b_i"].astype(dtype)).astype(f32)
+    x_f = (xc @ p["w_f"].astype(dtype) + p["b_f"].astype(dtype)).astype(f32)
+    state = cache["state"] if cache else {
+        "h": jnp.zeros((b, d), f32), "c": jnp.zeros((b, d), f32),
+        "n": jnp.zeros((b, d), f32), "m": jnp.full((b, d), -1e30, f32)}
+    hs, new_state = _slstm_scan(p, x_z, x_i, x_f, x_o, H, state)
+    y = _group_norm(hs.astype(dtype), p["gn_scale"], H)
+    # gated up/down FFN (factor 4/3)
+    u1 = y @ p["up1"].astype(dtype)
+    u2 = y @ p["up2"].astype(dtype)
+    out = (jax.nn.gelu(u1) * u2) @ p["down"].astype(dtype)
+    new_cache = {"conv": conv_state, "state": new_state}
+    return constrain(out, "batch", "seq", "embed"), new_cache
+
+
+def slstm_init_cache(cfg, batch: int, dtype):
+    d = cfg.d_model
+    f32 = jnp.float32
+    return {"conv": jnp.zeros((batch, cfg.conv_width - 1, d), dtype),
+            "state": {"h": jnp.zeros((batch, d), f32), "c": jnp.zeros((batch, d), f32),
+                      "n": jnp.zeros((batch, d), f32), "m": jnp.full((batch, d), -1e30, f32)}}

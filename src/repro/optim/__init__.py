@@ -1,0 +1,2 @@
+from repro.optim.adamw import adamw, clip_by_global_norm, global_norm  # noqa: F401
+from repro.optim.schedules import constant, cosine, linear_warmup  # noqa: F401

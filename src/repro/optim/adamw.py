@@ -1,0 +1,82 @@
+"""AdamW in pure JAX (no optax available in this environment).
+
+The PEFT training architecture partitions params into (trainable, frozen)
+subtrees *before* the optimizer ever sees them, so the frozen backbone
+carries zero optimizer state — the property that lets a 400B frozen MoE
+fine-tune on v5e HBM. The optimizer therefore needs no masking; a mask
+variant is still provided for partial-backbone regimes.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves))) if leaves else jnp.zeros(())
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), g
+
+
+def adamw(lr: Callable[[jax.Array], jax.Array] | float,
+          b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0, mask=None):
+    """Returns (init_fn, update_fn). ``lr`` may be a schedule fn of step.
+
+    ``mask``: optional pytree of bools (True = apply weight decay); matches
+    the common "no decay on bias/norm" policy when supplied.
+    """
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init_fn(params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(zeros, params),
+                          nu=jax.tree.map(zeros, params))
+
+    def update_fn(grads, state: AdamWState, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p, decay_ok=True):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            mh = m / c1
+            vh = v / c2
+            delta = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay and decay_ok:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype)
+            return new_p, m, v
+
+        if mask is None:
+            out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        else:
+            out = jax.tree.map(lambda g, m, v, p, dk: upd(g, m, v, p, dk),
+                               grads, state.mu, state.nu, params, mask)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda o: o[1], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda o: o[2], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu)
+
+    return init_fn, update_fn

@@ -1,0 +1,44 @@
+"""Gradient compression for the DP all-reduce: bf16 + error feedback.
+
+Used by the shard_map ("manual DP") training mode: per-device gradients are
+compressed to bf16 before crossing the ICI/DCN, halving all-reduce bytes;
+the quantization error is fed back into the next step (error-feedback keeps
+the long-run update unbiased). The SPMD/GSPMD mode gets the equivalent
+effect from bf16 backward compute; this module is the explicit, testable
+artifact for the manual path.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(grads) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_decompress(g, err):
+    """Returns (bf16-rounded fp32 value, new error)."""
+    g32 = g.astype(jnp.float32) + err
+    q = g32.astype(jnp.bfloat16)
+    return q, g32 - q.astype(jnp.float32)
+
+
+def psum_compressed(grads, err_state, axis_name: str) -> Tuple[Any, Any]:
+    """All-reduce mean of bf16-compressed grads with error feedback.
+
+    Call inside shard_map with ``axis_name`` bound to the DP mesh axis.
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, e):
+        q, new_e = compress_decompress(g, e)
+        s = jax.lax.psum(q, axis_name)            # bf16 on the wire
+        return s.astype(jnp.float32) / n, new_e
+
+    out = jax.tree.map(one, grads, err_state)
+    mean = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return mean, new_err

@@ -1,0 +1,27 @@
+"""Learning-rate schedules (step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        w = jnp.minimum(1.0, s / max(1, warmup_steps))
+        return jnp.asarray(lr, jnp.float32) * w
+    return fn
+
+
+def cosine(lr: float, total_steps: int, warmup_steps: int = 0,
+           final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        w = jnp.minimum(1.0, s / max(1, warmup_steps)) if warmup_steps else 1.0
+        prog = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0)
+        c = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.asarray(lr, jnp.float32) * w * c
+    return fn

@@ -1,0 +1,2 @@
+from repro.roofline.analysis import (  # noqa: F401
+    HW_V5E, collective_bytes_from_hlo, roofline_report, model_flops)

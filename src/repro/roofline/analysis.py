@@ -1,0 +1,143 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_chip
+    memory     = HLO_bytes_per_device / HBM_bw_chip
+    collective = wire_bytes_per_device / ICI_link_bw
+
+Sources: ``compiled.cost_analysis()`` (flops / bytes accessed, per device —
+the SPMD module is the per-device program) and the HLO text for collective
+ops. cost_analysis has no collective traffic, so we parse every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+and estimate wire bytes from the result shapes:
+
+    all-reduce       2 * bytes      (ring: reduce-scatter + all-gather)
+    all-gather       bytes          (each device receives ~result size)
+    reduce-scatter   bytes          (operand-sized traffic)
+    all-to-all       bytes
+    collective-permute bytes
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import numpy as np
+
+HW_V5E = {
+    "peak_flops": 197e12,      # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,           # bytes/s per chip
+    "ici_bw": 50e9,            # bytes/s per link
+    "hbm_bytes": 16e9,         # HBM capacity per chip
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-op-type {count, bytes, wire_bytes} from an HLO module dump.
+
+    ``-done`` halves of async pairs are skipped (the ``-start`` carries the
+    shape); sync ops count once.
+    """
+    out: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        if "-done(" in line or "-done." in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        rec = out.setdefault(op, {"count": 0, "bytes": 0.0, "wire_bytes": 0.0})
+        rec["count"] += 1
+        rec["bytes"] += b
+        rec["wire_bytes"] += b * _WIRE_FACTOR[op]
+    return out
+
+
+def model_flops(cfg, shape, n_params_total: int) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (fwd), N = active params (MoE)."""
+    n_active = n_params_total
+    if cfg.moe is not None:
+        m = cfg.moe
+        n_moe_layers = sum(cfg.moe_layer_mask())
+        per_expert = 3 * cfg.d_model * m.d_ff_expert
+        n_active -= n_moe_layers * (m.num_experts - m.top_k) * per_expert
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    mult = 6 if shape.kind == "train" else 2
+    return float(mult) * n_active * tokens
+
+
+def roofline_report(*, flops_per_device: float, bytes_per_device: float,
+                    coll: Dict[str, Dict[str, float]], n_chips: int,
+                    cfg=None, shape=None, n_params_total: Optional[int] = None,
+                    hw: Dict = HW_V5E) -> Dict:
+    wire = sum(r["wire_bytes"] for r in coll.values())
+    t_compute = flops_per_device / hw["peak_flops"]
+    t_memory = bytes_per_device / hw["hbm_bw"]
+    t_coll = wire / hw["ici_bw"]
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    rep = {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "wire_bytes_per_device": wire,
+        "collectives": coll,
+        "n_chips": n_chips,
+    }
+    if cfg is not None and shape is not None and n_params_total is not None:
+        mf = model_flops(cfg, shape, n_params_total)
+        rep["model_flops_total"] = mf
+        rep["model_flops_per_device"] = mf / n_chips
+        rep["hlo_flops_per_device"] = flops_per_device
+        rep["useful_flops_ratio"] = (mf / n_chips) / max(flops_per_device, 1.0)
+        # roofline fraction: useful work over the time the dominant term implies
+        bound = max(terms.values())
+        rep["roofline_fraction"] = ((mf / n_chips) / hw["peak_flops"]) / max(bound, 1e-12)
+    return rep
+
+
+def format_row(arch: str, shape: str, rep: Dict) -> str:
+    return (f"{arch:28s} {shape:12s} "
+            f"comp={rep['compute_s']*1e3:9.3f}ms mem={rep['memory_s']*1e3:9.3f}ms "
+            f"coll={rep['collective_s']*1e3:9.3f}ms dom={rep['dominant']:10s} "
+            f"useful={rep.get('useful_flops_ratio', float('nan')):.3f} "
+            f"roofline={rep.get('roofline_fraction', float('nan')):.3f}")

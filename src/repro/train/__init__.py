@@ -1,0 +1,2 @@
+from repro.train.step import TrainConfig, make_train_step, split_train  # noqa: F401
+from repro.train.loop import TrainLoop  # noqa: F401

@@ -1,0 +1,59 @@
+import os
+import sys
+
+# Tests run on the single real CPU device. The 512-device override belongs
+# ONLY to launch/dryrun.py (per the dry-run contract); distributed tests
+# spawn subprocesses with their own XLA_FLAGS.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture()
+def rng():
+    # function-scoped: every test sees the same deterministic stream
+    return np.random.default_rng(0)
+
+
+def rnd(rng, *shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype)
+
+
+@pytest.fixture(scope="session")
+def tiny_lm():
+    """A tiny dense model + params shared across tests."""
+    from repro import configs
+    from repro.models.model import Model, ModelOptions
+    cfg = configs.reduced(configs.get("smollm-360m"), repeats=2)
+    model = Model(cfg, ModelOptions(chunk_q=8, chunk_kv=8, mlstm_chunk=4))
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="session")
+def pretrained_lm():
+    """Tiny model briefly pretrained with full FT — the paper's setting
+    (PEFT on a *pretrained* backbone)."""
+    from repro import configs
+    from repro.core import peft as P
+    from repro.data.pipeline import LMStream
+    from repro.models.model import Model, ModelOptions
+    from repro.train.step import TrainConfig, make_train_step, split_train
+    cfg = configs.reduced(configs.get("smollm-360m"), repeats=2)
+    model = Model(cfg, ModelOptions(chunk_q=16, chunk_kv=16))
+    params = model.init(jax.random.PRNGKey(0))
+    popt = P.PEFTOptions(method="ft")
+    tcfg = TrainConfig(peft=popt, lr=3e-3, loss_chunk=16)
+    init_state, train_step = make_train_step(model, tcfg)
+    trainable, frozen = split_train(params, P.init(jax.random.PRNGKey(1), cfg, popt), "ft")
+    state = init_state(trainable)
+    step = jax.jit(train_step)
+    stream = LMStream(vocab_size=cfg.vocab_size, seq_len=32, batch_size=8, seed=0)
+    for i in range(60):
+        b = stream.next()
+        state, _ = step(state, frozen, {k: jnp.asarray(v) for k, v in b.items()},
+                        jax.random.PRNGKey(i))
+    return cfg, model, state["trainable"]["backbone"]

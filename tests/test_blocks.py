@@ -1,0 +1,151 @@
+"""Recurrent block families: chunkwise==recurrent, decode==full, MoE semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import moe as moe_mod
+from repro.models import recurrent as rec_mod
+from repro.models import xlstm as xl_mod
+
+
+def _t(rng, *sh, scale=1.0, dtype=jnp.float32):
+    return jnp.asarray(rng.normal(size=sh) * scale, dtype)
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [1, 4, 8, 16, 32])
+def test_mlstm_chunkwise_matches_recurrent(rng, chunk):
+    b, s, H, hd = 2, 32, 2, 8
+    q, k, v = (_t(rng, b, s, H, hd) for _ in range(3))
+    i_raw = _t(rng, b, s, H, scale=2.0)
+    f_raw = _t(rng, b, s, H, scale=2.0) + 2.0
+    h_ref, st_ref = xl_mod.mlstm_recurrent(q, k, v, i_raw, f_raw)
+    h_c, st_c = xl_mod.mlstm_chunkwise(q, k, v, i_raw, f_raw, chunk=chunk)
+    scale = float(jnp.abs(h_ref).max())
+    np.testing.assert_allclose(np.asarray(h_ref), np.asarray(h_c),
+                               atol=max(5e-4, 1e-4 * scale), rtol=2e-3)
+    for a, b_ in zip(st_ref, st_c):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   atol=5e-3, rtol=2e-3)
+
+
+def test_mlstm_chunkwise_unroll_equals_scan(rng):
+    b, s, H, hd = 1, 16, 2, 8
+    q, k, v = (_t(rng, b, s, H, hd) for _ in range(3))
+    i_raw = _t(rng, b, s, H)
+    f_raw = _t(rng, b, s, H) + 2.0
+    h1, _ = xl_mod.mlstm_chunkwise(q, k, v, i_raw, f_raw, chunk=4, unroll=False)
+    h2, _ = xl_mod.mlstm_chunkwise(q, k, v, i_raw, f_raw, chunk=4, unroll=True)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-6)
+
+
+@pytest.mark.parametrize("block,initc", [
+    (xl_mod.apply_mlstm_block, xl_mod.mlstm_init_cache),
+    (xl_mod.apply_slstm_block, xl_mod.slstm_init_cache)])
+def test_xlstm_block_decode_matches_full(rng, block, initc):
+    cfg = configs.reduced(configs.get("xlstm-350m"))
+    key = jax.random.PRNGKey(0)
+    init = (xl_mod.mlstm_block_init if block is xl_mod.apply_mlstm_block
+            else xl_mod.slstm_block_init)
+    p = init(key, cfg)
+    x = _t(rng, 2, 16, cfg.d_model)
+    kw = dict(chunk=4) if block is xl_mod.apply_mlstm_block else {}
+    full, _ = block(cfg, p, x, jnp.float32, cache=initc(cfg, 2, jnp.float32), **kw)
+    c = initc(cfg, 2, jnp.float32)
+    outs = []
+    for t in range(16):
+        o, c = block(cfg, p, x[:, t:t + 1], jnp.float32, cache=c)
+        outs.append(o)
+    od = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(od), np.asarray(full), atol=5e-5)
+
+
+# --------------------------------------------------------------------------
+# RG-LRU
+# --------------------------------------------------------------------------
+
+def test_rglru_decode_matches_full(rng):
+    cfg = configs.reduced(configs.get("recurrentgemma-9b"))
+    p = rec_mod.rglru_init(jax.random.PRNGKey(0), cfg)
+    x = _t(rng, 2, 16, cfg.d_model)
+    full, cf = rec_mod.apply_rglru(cfg, p, x, jnp.float32,
+                                   cache=rec_mod.rglru_init_cache(cfg, 2, jnp.float32))
+    c = rec_mod.rglru_init_cache(cfg, 2, jnp.float32)
+    outs = []
+    for t in range(16):
+        o, c = rec_mod.apply_rglru(cfg, p, x[:, t:t + 1], jnp.float32, cache=c)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(full), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c["h"]), np.asarray(cf["h"]), atol=1e-5)
+
+
+def test_rglru_gate_decay_bounded(rng):
+    """a_t must be in (0, 1] — the recurrence cannot blow up."""
+    cfg = configs.reduced(configs.get("recurrentgemma-9b"))
+    p = rec_mod.rglru_init(jax.random.PRNGKey(0), cfg)
+    xc = _t(rng, 2, 8, cfg.lru_width or cfg.d_model, scale=5.0)
+    a, _ = rec_mod._gates(p, xc, cfg.num_heads)
+    assert float(a.max()) <= 1.0 and float(a.min()) > 0.0
+
+
+# --------------------------------------------------------------------------
+# MoE
+# --------------------------------------------------------------------------
+
+def test_moe_dropless_at_high_capacity(rng):
+    cfg = configs.reduced(configs.get("qwen3-moe-30b-a3b"))
+    p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg)
+    x = _t(rng, 4, 8, cfg.d_model)
+    out, aux = moe_mod.apply_moe(cfg, p, x, jnp.float32)
+    assert out.shape == x.shape
+    assert float(aux["moe_dropped_frac"]) == 0.0
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_moe_capacity_drops_tokens(rng):
+    import dataclasses
+    cfg = configs.reduced(configs.get("qwen3-moe-30b-a3b"))
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=0.25))
+    p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg)
+    x = _t(rng, 8, 16, cfg.d_model)
+    out, aux = moe_mod.apply_moe(cfg, p, x, jnp.float32)
+    assert float(aux["moe_dropped_frac"]) > 0.0
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_moe_matches_dense_expert_sum(rng):
+    """With top_k == num_experts and no drops, MoE == prob-weighted sum of
+    all experts run densely (the routing math oracle)."""
+    import dataclasses
+    cfg = configs.reduced(configs.get("qwen3-moe-30b-a3b"))
+    cfg = cfg.replace(moe=dataclasses.replace(
+        cfg.moe, top_k=cfg.moe.num_experts, capacity_factor=float(cfg.moe.num_experts)))
+    m = cfg.moe
+    p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg)
+    x = _t(rng, 2, 4, cfg.d_model)
+    out, aux = moe_mod.apply_moe(cfg, p, x, jnp.float32)
+
+    xf = x.reshape(-1, cfg.d_model)
+    probs = jax.nn.softmax(xf @ p["router"], axis=-1)
+    ys = []
+    for e in range(m.num_experts):
+        h = jax.nn.silu(xf @ p["wg"][e]) * (xf @ p["wu"][e])
+        ys.append(h @ p["wd"][e])
+    dense = sum(probs[:, e:e + 1] * ys[e] for e in range(m.num_experts))
+    np.testing.assert_allclose(np.asarray(out.reshape(-1, cfg.d_model)),
+                               np.asarray(dense), atol=1e-4)
+
+
+def test_moe_grads_flow_to_router(rng):
+    cfg = configs.reduced(configs.get("qwen3-moe-30b-a3b"))
+    p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg)
+    x = _t(rng, 2, 8, cfg.d_model)
+    g = jax.grad(lambda p: moe_mod.apply_moe(cfg, p, x, jnp.float32)[0].sum())(p)
+    assert float(jnp.abs(g["router"]).max()) > 0.0
+    assert all(bool(jnp.all(jnp.isfinite(l))) for l in jax.tree.leaves(g))

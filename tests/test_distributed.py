@@ -1,0 +1,260 @@
+"""Multi-device correctness via subprocesses (8 fake CPU devices).
+
+XLA locks the device count at first init, so each scenario runs in its own
+python subprocess with XLA_FLAGS set — keeping the main test process on a
+single device as required.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run_sub(body: str, devices: int = 8, timeout: int = 600) -> str:
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+        import sys
+        sys.path.insert(0, {SRC!r})
+        import jax, jax.numpy as jnp
+        import numpy as np
+    """) + textwrap.dedent(body)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=timeout)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_pjit_train_step_matches_single_device():
+    """The sharded (2 data x 4 model) train step must reproduce the
+    single-device step bit-for-bit-ish (fp32 tolerance)."""
+    run_sub("""
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro import configs
+        from repro.core import peft as PE, aot as A
+        from repro.distrib import sharding as shlib, axes as axlib
+        from repro.launch.mesh import make_mesh
+        from repro.models.model import Model, ModelOptions
+        from repro.train.step import TrainConfig, make_train_step, split_train
+
+        cfg = configs.reduced(configs.get("smollm-360m"), repeats=2)
+        model = Model(cfg, ModelOptions(chunk_q=16, chunk_kv=16))
+        params = model.init(jax.random.PRNGKey(0))
+        popt = PE.PEFTOptions(method="aot", aot=A.AoTOptions(mode="fc", rank=8, dropout=0.0))
+        pp = PE.init(jax.random.PRNGKey(1), cfg, popt)
+        tcfg = TrainConfig(peft=popt, lr=1e-3, loss_chunk=16)
+        init_state, train_step = make_train_step(model, tcfg)
+        trainable, frozen = split_train(params, pp, "aot")
+        state = init_state(trainable)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)), jnp.int32),
+                 "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)), jnp.int32)}
+        key = jax.random.PRNGKey(0)
+
+        # single device reference
+        s_ref, m_ref = jax.jit(train_step)(state, frozen, batch, key)
+
+        mesh = make_mesh((2, 4), ("data", "model"))
+        rules = shlib.tp_dp_rules()
+        def shard(tree, names_fn):
+            def put(kp, x):
+                names = names_fn(axlib.path_strings(kp), tuple(x.shape))
+                return jax.device_put(x, NamedSharding(mesh, shlib.spec_for(names, x.shape, mesh, rules)))
+            return jax.tree_util.tree_map_with_path(put, tree)
+        state_s = shard(state, axlib.logical_axes_for)
+        frozen_s = shard(frozen, axlib.logical_axes_for)
+        batch_s = shard(batch, lambda p, s: axlib.batch_axes_for(p[-1], s))
+        with mesh, shlib.use_rules(mesh, rules):
+            s_out, m_out = jax.jit(train_step)(state_s, frozen_s, batch_s, key)
+        for a, b in zip(jax.tree.leaves(s_ref["trainable"]), jax.tree.leaves(s_out["trainable"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(jax.device_get(b)), atol=2e-5, rtol=1e-4)
+        assert abs(float(m_ref["loss"]) - float(m_out["loss"])) < 1e-4
+        print("SPMD==single OK", float(m_ref["loss"]), float(m_out["loss"]))
+    """)
+
+
+def test_compressed_psum_shard_map():
+    """bf16+error-feedback all-reduce inside shard_map: mean within bf16
+    tolerance of the true mean; error feedback removes long-run bias."""
+    run_sub("""
+        from functools import partial
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import make_mesh
+        from repro.optim.compression import psum_compressed, init_error_state
+
+        mesh = make_mesh((8,), ("data",))
+        rng = np.random.default_rng(0)
+        g = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
+
+        @partial(shard_map, mesh=mesh, in_specs=(P("data", None), P("data", None)),
+                 out_specs=(P("data", None), P("data", None)))
+        def allred(gs, errs):
+            mean, new_err = psum_compressed({"g": gs}, {"g": errs}, "data")
+            return mean["g"], new_err["g"]
+
+        err = jnp.zeros_like(g)
+        mean, err = allred(g, err)
+        true_mean = g.mean(axis=0, keepdims=True)
+        got = jax.device_get(mean)[0]
+        np.testing.assert_allclose(got, np.asarray(true_mean)[0], atol=2e-2)
+        # accumulated over steps, error feedback keeps the running sum honest
+        acc = np.zeros(64); errs = jnp.zeros_like(g)
+        for i in range(16):
+            m, errs = allred(g, errs)
+            acc += jax.device_get(m)[0]
+        np.testing.assert_allclose(acc / 16, np.asarray(true_mean)[0], atol=2e-3)
+        print("compressed psum OK")
+    """)
+
+
+def test_elastic_reshard_roundtrip():
+    """Checkpoint on mesh A, restore resharded onto mesh B: values identical."""
+    run_sub("""
+        import tempfile
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.checkpoint.manager import CheckpointManager
+        from repro.checkpoint.reshard import reshard_tree
+        from repro.distrib import sharding as shlib, axes as axlib
+        from repro.launch.mesh import make_mesh
+
+        rng = np.random.default_rng(0)
+        tree = {"groups": [{"b0": {"attn": {"wq": jnp.asarray(rng.normal(size=(2, 16, 32)), jnp.float32)}}}],
+                "embed": {"tok": jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)}}
+        mesh_a = make_mesh((2, 4), ("data", "model"))
+        rules = shlib.tp_dp_rules()
+        tree_a = reshard_tree(tree, mesh_a, rules,
+                              lambda p, l: axlib.logical_axes_for(p, tuple(l.shape)))
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, async_save=False)
+            mgr.save(1, tree_a)
+            restored, _ = mgr.restore(tree)
+            mesh_b = make_mesh((4, 2), ("data", "model"))
+            tree_b = reshard_tree(restored, mesh_b, rules,
+                                  lambda p, l: axlib.logical_axes_for(p, tuple(l.shape)))
+        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(tree_b)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(jax.device_get(y)))
+        print("elastic reshard OK")
+    """)
+
+
+def test_multitask_serving_sharded():
+    """Multi-task fused-AoT serving under a 2x4 mesh == unsharded result."""
+    run_sub("""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import configs
+        from repro.core import peft as PE, aot as A
+        from repro.distrib import sharding as shlib, axes as axlib
+        from repro.launch.mesh import make_mesh
+        from repro.models.model import Model, ModelOptions
+
+        cfg = configs.reduced(configs.get("smollm-360m"), repeats=2)
+        model = Model(cfg, ModelOptions(chunk_q=16, chunk_kv=16))
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16)), jnp.int32)}
+        tasks = []
+        for t in range(2):
+            opt = PE.PEFTOptions(method="aot", aot=A.AoTOptions(mode="fc", rank=4, dropout=0.0))
+            pp = PE.init(jax.random.PRNGKey(t), cfg, opt)
+            pp["aot"] = jax.tree.map(lambda x: jax.random.normal(jax.random.PRNGKey(5+t), x.shape)*0.05, pp["aot"])
+            tasks.append(A.fuse(pp["aot"], cfg, opt.aot, embed=params["embed"]["tok"], vocab_chunk=64))
+        stacked = A.stack_tasks(tasks)
+        fopt = PE.PEFTOptions(method="aot", aot=A.AoTOptions(mode="fused"))
+        peft = PE.make({"aot": stacked}, fopt)
+        task_ids = jnp.asarray([0, 1, 1, 0], jnp.int32)
+
+        def f(params, table, tokens, task_ids):
+            p = dict(peft); p["params"] = {"aot": table}; p["task_ids"] = task_ids
+            return model.logits(params, {"tokens": tokens}, p)[0]
+        ref = jax.jit(f)(params, stacked, batch["tokens"], task_ids)
+
+        mesh = make_mesh((2, 4), ("data", "model"))
+        rules = shlib.tp_dp_rules()
+        def put(tree, names_fn):
+            def one(kp, x):
+                names = names_fn(axlib.path_strings(kp), tuple(x.shape))
+                return jax.device_put(x, NamedSharding(mesh, shlib.spec_for(names, x.shape, mesh, rules)))
+            return jax.tree_util.tree_map_with_path(one, tree)
+        params_s = put(params, axlib.logical_axes_for)
+        stacked_s = put({"aot": stacked}, axlib.logical_axes_for)["aot"]
+        with mesh, shlib.use_rules(mesh, rules):
+            out = jax.jit(f)(params_s, stacked_s,
+                             jax.device_put(batch["tokens"], NamedSharding(mesh, P("data", None))),
+                             jax.device_put(task_ids, NamedSharding(mesh, P("data"))))
+        np.testing.assert_allclose(np.asarray(jax.device_get(ref)),
+                                   np.asarray(jax.device_get(out)), atol=2e-5, rtol=1e-4)
+        print("sharded multitask OK")
+    """)
+
+
+@pytest.mark.slow
+def test_dryrun_cell_lowering():
+    """One full dry-run cell (smallest arch) on the production 16x16 mesh."""
+    run_sub("""
+        from repro.launch.dryrun import run_cell
+        res = run_cell("smollm-360m", "decode_32k", multi_pod=False, verbose=False)
+        assert res["flops_per_device"] > 0
+        assert res["memory"]["argument_bytes"] > 0
+        print("dryrun cell OK")
+    """, devices=512, timeout=900)
+
+
+def test_ep_moe_matches_gspmd():
+    """shard_map expert-parallel MoE == GSPMD gather path (2x4 mesh)."""
+    run_sub("""
+        import dataclasses
+        from repro import configs
+        from repro.distrib import sharding as shlib
+        from repro.launch.mesh import make_mesh
+        from repro.models import moe as moe_mod
+
+        cfg = configs.reduced(configs.get("qwen3-moe-30b-a3b"))
+        cfg = cfg.replace(moe=dataclasses.replace(
+            cfg.moe, num_experts=8, top_k=2, capacity_factor=8.0))
+        p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(4, 16, cfg.d_model)), jnp.float32)
+        ref, _ = moe_mod.apply_moe_gspmd(cfg, p, x, jnp.float32)
+        mesh = make_mesh((2, 4), ("data", "model"))
+        rules = shlib.tp_dp_rules()
+        with mesh, shlib.use_rules(mesh, rules):
+            assert moe_mod._ep_applicable(cfg, x)
+            out, aux = jax.jit(lambda p, x: moe_mod.apply_moe_ep(cfg, p, x, jnp.float32))(p, x)
+            g = jax.jit(jax.grad(lambda x: moe_mod.apply_moe_ep(cfg, p, x, jnp.float32)[0].sum()))(x)
+        np.testing.assert_allclose(np.asarray(jax.device_get(out)), np.asarray(ref), atol=1e-4)
+        assert bool(jnp.all(jnp.isfinite(jax.device_get(g))))
+        print("EP == GSPMD OK")
+    """)
+
+
+def test_ep_moe_with_drops_stays_finite():
+    """Capacity overflow in the EP path drops tokens but never corrupts."""
+    run_sub("""
+        import dataclasses
+        from repro import configs
+        from repro.distrib import sharding as shlib
+        from repro.launch.mesh import make_mesh
+        from repro.models import moe as moe_mod
+
+        cfg = configs.reduced(configs.get("qwen3-moe-30b-a3b"))
+        cfg = cfg.replace(moe=dataclasses.replace(
+            cfg.moe, num_experts=8, top_k=2, capacity_factor=0.5))
+        p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg)
+        # collapse the router: every token picks the same two experts, so the
+        # owning shard's send buffer must overflow
+        p["router"] = jnp.zeros_like(p["router"])
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(4, 16, cfg.d_model)), jnp.float32)
+        mesh = make_mesh((2, 4), ("data", "model"))
+        with mesh, shlib.use_rules(mesh, shlib.tp_dp_rules()):
+            out, aux = jax.jit(lambda p, x: moe_mod.apply_moe_ep(cfg, p, x, jnp.float32))(p, x)
+        out = jax.device_get(out)
+        assert np.isfinite(out).all()
+        assert float(aux["moe_dropped_frac"]) > 0.0
+        print("EP drops OK", float(aux["moe_dropped_frac"]))
+    """)

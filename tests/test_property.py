@@ -1,0 +1,122 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aot as A
+from repro.kernels import ref as R
+from repro.kernels.aot_bias import aot_gather_add_kernel
+from repro.optim import adamw
+from repro.optim.compression import compress_decompress
+
+S = settings(max_examples=20, deadline=None)
+
+
+@S
+@given(T=st.integers(1, 40), V=st.integers(2, 60), d=st.integers(1, 48),
+       seed=st.integers(0, 10_000))
+def test_gather_add_kernel_matches_oracle(T, V, d, seed):
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(rng.normal(size=(T, d)), jnp.float32)
+    tbl = jnp.asarray(rng.normal(size=(V, d)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, V, (T,)), jnp.int32)
+    out = aot_gather_add_kernel(h, tbl, ids, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(R.aot_gather_add_ref(h, tbl, ids)))
+
+
+@S
+@given(V=st.integers(2, 200), a=st.integers(0, 0), seed=st.integers(0, 1000))
+def test_kron_factors_cover_vocab(V, a, seed):
+    fa, fb = A.kron_factors(V)
+    assert fa * fb >= V
+
+
+@S
+@given(seed=st.integers(0, 1000), r=st.integers(1, 6), V=st.integers(4, 40),
+       d=st.integers(2, 16))
+def test_kron_rows_property(seed, r, V, d):
+    rng = np.random.default_rng(seed)
+    a, b = A.kron_factors(V)
+    wl = jnp.asarray(rng.normal(size=(a, r)), jnp.float32)
+    wm = jnp.asarray(rng.normal(size=(b, r)), jnp.float32)
+    wr = jnp.asarray(rng.normal(size=(r * r, d)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, V, (9,)), jnp.int32)
+    rows = A.rows_kron({"wl": wl, "wm": wm, "wr": wr}, ids,
+                       A.AoTOptions(mode="kron", rank=r, dropout=0.0), V)
+    full = jnp.kron(wl, wm) @ wr
+    np.testing.assert_allclose(np.asarray(rows), np.asarray(full[ids]),
+                               atol=1e-4, rtol=1e-4)
+
+
+@S
+@given(seed=st.integers(0, 1000), V=st.integers(4, 64), d=st.integers(2, 24),
+       r=st.integers(1, 8), L=st.integers(1, 4))
+def test_fc_fusion_property(seed, V, d, r, L):
+    """fuse(reparam)[ids] == rows_fc(reparam, E[ids]) for random params."""
+    rng = np.random.default_rng(seed)
+    E = jnp.asarray(rng.normal(size=(V, d)), jnp.float32)
+    p = {"w1": jnp.asarray(rng.normal(size=(L, d, r)), jnp.float32),
+         "b1": jnp.asarray(rng.normal(size=(L, r)), jnp.float32),
+         "w2": jnp.asarray(rng.normal(size=(L, r, d)), jnp.float32),
+         "b2": jnp.asarray(rng.normal(size=(L, d)), jnp.float32)}
+    opt = A.AoTOptions(mode="fc", rank=r, dropout=0.0)
+
+    class FakeCfg:
+        num_layers, vocab_size, d_model = L, V, d
+    fused = A.fuse(p, FakeCfg, opt, embed=E, vocab_chunk=7)
+    ids = jnp.asarray(rng.integers(0, V, (5,)), jnp.int32)
+    for l in range(L):
+        lp = jax.tree.map(lambda x, l=l: x[l], p)
+        rows = A.rows_fc(lp, jnp.take(E, ids, axis=0), opt)
+        np.testing.assert_allclose(np.asarray(rows),
+                                   np.asarray(fused["table"][l][ids]),
+                                   atol=1e-5)
+
+
+@S
+@given(seed=st.integers(0, 1000))
+def test_compression_error_feedback_unbiased(seed):
+    """Sum of transmitted values + final error == sum of true values."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+    err = jnp.zeros_like(g)
+    sent = jnp.zeros_like(g)
+    for _ in range(8):
+        q, err = compress_decompress(g, err)
+        sent = sent + q.astype(jnp.float32)
+    total_true = 8 * g
+    np.testing.assert_allclose(np.asarray(sent + err), np.asarray(total_true),
+                               rtol=1e-3, atol=1e-3)
+
+
+@S
+@given(seed=st.integers(0, 100), steps=st.integers(1, 5))
+def test_adamw_step_counts(seed, steps):
+    init, update = adamw(1e-2)
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.normal(size=(8,)), jnp.float32)}
+    state = init(params)
+    for _ in range(steps):
+        g = {"w": jnp.asarray(rng.normal(size=(8,)), jnp.float32)}
+        params, state = update(g, state, params)
+    assert int(state.step) == steps
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(params))
+
+
+@S
+@given(seed=st.integers(0, 500), b=st.integers(1, 3), s=st.integers(2, 24),
+       w=st.integers(1, 30))
+def test_attention_chunked_random_shapes(seed, b, s, w):
+    from repro.models import layers as L
+    rng = np.random.default_rng(seed)
+    h, kvh, hd = 4, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kvh, hd)), jnp.float32)
+    ref = L.attention_ref(q, k, v, causal=True, window=w)
+    out = L.attention_chunked(q, k, v, causal=True, window=w,
+                              chunk_q=5, chunk_kv=3)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out), atol=5e-5,
+                               rtol=1e-4)

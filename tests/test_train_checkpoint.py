@@ -1,0 +1,201 @@
+"""Training loop, checkpoint/restart determinism, optimizer, data pipeline."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import aot as A
+from repro.core import peft as P
+from repro.data.pipeline import LMStream
+from repro.data.tasks import ClassificationTask
+from repro.models.model import Model, ModelOptions
+from repro.optim import adamw, clip_by_global_norm, global_norm
+from repro.optim.schedules import cosine, linear_warmup
+from repro.train.loop import TrainLoop, Watchdog
+from repro.train.step import TrainConfig, make_train_step, split_train
+
+
+def _setup(cfg, model, params, method="aot", lr=1e-3):
+    popt = P.PEFTOptions(method=method,
+                         aot=A.AoTOptions(mode="fc", rank=8, dropout=0.0))
+    pp = P.init(jax.random.PRNGKey(1), cfg, popt)
+    tcfg = TrainConfig(peft=popt, lr=lr, loss_chunk=16)
+    init_state, train_step = make_train_step(model, tcfg)
+    trainable, frozen = split_train(params, pp, method)
+    return init_state(trainable), frozen, jax.jit(train_step)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_quadratic():
+    init, update = adamw(0.1)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = init(params)
+    for _ in range(300):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state = update(g, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones((10,)) * 10.0}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+    assert float(norm) > 1.0
+
+
+def test_schedules():
+    w = linear_warmup(1.0, 10)
+    assert float(w(jnp.int32(5))) == pytest.approx(0.5)
+    c = cosine(1.0, 100, warmup_steps=10, final_frac=0.1)
+    assert float(c(jnp.int32(100))) == pytest.approx(0.1, abs=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint manager
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.ones((4,))}}
+    mgr.save(10, tree, extra={"data": {"step": 10}})
+    got, extra = mgr.restore(tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert extra["data"]["step"] == 10
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    tree = {"a": jnp.zeros((2,))}
+    for s in [1, 2, 3, 4]:
+        mgr.save(s, tree)
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    tree = {"a": jnp.ones((128, 128))}
+    for s in range(3):
+        mgr.save(s, tree)
+    mgr.wait()
+    assert mgr.all_steps() == [0, 1, 2]
+
+
+def test_checkpoint_ignores_partial_tmp(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    tree = {"a": jnp.zeros((2,))}
+    mgr.save(1, tree)
+    os.makedirs(tmp_path / "step_0000000002.tmp")   # simulated crash mid-save
+    assert mgr.latest_step() == 1
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_stream_determinism_and_resume():
+    s1 = LMStream(vocab_size=64, seq_len=16, batch_size=4, seed=7)
+    batches = [s1.next() for _ in range(5)]
+    s2 = LMStream(vocab_size=64, seq_len=16, batch_size=4, seed=7)
+    s2.restore({"step": 3, "seed": 7, "shard_id": 0, "num_shards": 1})
+    np.testing.assert_array_equal(batches[3]["tokens"], s2.next()["tokens"])
+
+
+def test_stream_shards_differ():
+    a = LMStream(vocab_size=64, seq_len=16, batch_size=4, seed=7,
+                 shard_id=0, num_shards=2).next()
+    b = LMStream(vocab_size=64, seq_len=16, batch_size=4, seed=7,
+                 shard_id=1, num_shards=2).next()
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_stream_is_learnable_bigram():
+    s = LMStream(vocab_size=64, seq_len=32, batch_size=8, seed=0, branching=2)
+    b = s.next()
+    # every (tok -> next) transition must be one of the 2 successors
+    succ = s._succ
+    ok = np.isin(b["labels"], succ[b["tokens"]].reshape(8, 32, -1)).all() if False else True
+    for i in range(8):
+        for t in range(32):
+            assert b["labels"][i, t] in succ[b["tokens"][i, t]]
+
+
+def test_classification_task_signal():
+    task = ClassificationTask("t", vocab_size=512, seq_len=32, num_classes=2,
+                              seed=0)
+    b = task.batch(64, step=0)
+    # keyword-count heuristic should recover most labels
+    counts = np.zeros((64, 2))
+    for c in range(2):
+        counts[:, c] = np.isin(b["tokens"], task.keywords[c]).sum(axis=1)
+    acc = (counts.argmax(1) == b["labels"]).mean()
+    assert acc > 0.9, acc
+
+
+# ---------------------------------------------------------------------------
+# loop: checkpoint/restart determinism (the fault-tolerance contract)
+# ---------------------------------------------------------------------------
+
+def test_train_resume_bitwise_deterministic(tmp_path, tiny_lm):
+    cfg, model, params = tiny_lm
+    stream_kw = dict(vocab_size=cfg.vocab_size, seq_len=16, batch_size=4, seed=3)
+
+    # uninterrupted: 6 steps
+    state, frozen, step = _setup(cfg, model, params)
+    loop = TrainLoop(train_step=step, frozen=frozen, stream=LMStream(**stream_kw),
+                     ckpt=None, log_every=100)
+    final_a = loop.run(state, 6)
+
+    # interrupted: 3 steps -> checkpoint -> fresh process state -> resume
+    state, frozen, step = _setup(cfg, model, params)
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    loop_b = TrainLoop(train_step=step, frozen=frozen,
+                       stream=LMStream(**stream_kw), ckpt=mgr, ckpt_every=3,
+                       log_every=100)
+    mid = loop_b.run(state, 3)
+
+    state_c, frozen, step = _setup(cfg, model, params)  # "restarted process"
+    loop_c = TrainLoop(train_step=step, frozen=frozen,
+                       stream=LMStream(**stream_kw), ckpt=mgr, ckpt_every=3,
+                       log_every=100)
+    restored, start = loop_c.resume(state_c)
+    assert start == 3
+    final_b = loop_c.run(restored, 6, start_step=3)
+
+    for a, b in zip(jax.tree.leaves(final_a["trainable"]),
+                    jax.tree.leaves(final_b["trainable"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_watchdog_fires():
+    import time
+    events = []
+    wd = Watchdog(0.2, lambda dt: events.append(dt)).start()
+    time.sleep(0.7)
+    wd.stop()
+    assert events, "watchdog did not fire on a stalled step"
+
+
+def test_peft_only_updates_peft(tiny_lm):
+    """The frozen backbone must be bit-identical after PEFT training."""
+    cfg, model, params = tiny_lm
+    state, frozen, step = _setup(cfg, model, params)
+    stream = LMStream(vocab_size=cfg.vocab_size, seq_len=16, batch_size=4, seed=0)
+    b = stream.next()
+    state2, _ = step(state, frozen, {k: jnp.asarray(v) for k, v in b.items()},
+                     jax.random.PRNGKey(0))
+    for a, b_ in zip(jax.tree.leaves(frozen), jax.tree.leaves(frozen)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+    assert "backbone" not in state2["trainable"]
+    # optimizer state exists only for the PEFT subtree
+    n_opt = sum(x.size for x in jax.tree.leaves(state2["opt"].mu))
+    n_peft = sum(x.size for x in jax.tree.leaves(state2["trainable"]))
+    assert n_opt == n_peft
