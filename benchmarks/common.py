@@ -67,11 +67,5 @@ def pretrain(cfg, model, params, steps: int = 40, seq: int = 64, batch: int = 8)
 
 
 def random_aot_fused(cfg, params, seed: int = 0, scale: float = 0.02):
-    opt = A.AoTOptions(mode="fc", rank=16, dropout=0.0)
-    pp = P.init(jax.random.PRNGKey(seed), cfg,
-                P.PEFTOptions(method="aot", aot=opt))
-    pp["aot"] = jax.tree.map(
-        lambda x: jax.random.normal(jax.random.PRNGKey(seed + 77), x.shape) * scale,
-        pp["aot"])
-    return A.fuse(pp["aot"], cfg, opt, embed=params["embed"]["tok"],
-                  vocab_chunk=512)
+    return A.random_fused(cfg, params["embed"]["tok"], seed=seed, rank=16,
+                          scale=scale, vocab_chunk=512)

@@ -104,9 +104,7 @@ def rows_fc(layer_p, e_rows, opt: AoTOptions, dtype=jnp.float32,
 def rows_kron(layer_p, ids, opt: AoTOptions, vocab: int, dtype=jnp.float32,
               dropout_rng=None):
     """P rows by Kronecker lookup. Row v=(i,j) = vec(W_L[i] ⊗ W_M[j]) W_R."""
-    a = layer_p["wl"].shape[0]
     b = layer_p["wm"].shape[0]
-    del a
     i = ids // b
     j = ids % b
     wl = jnp.take(layer_p["wl"].astype(dtype), i, axis=0)      # (..., r)
@@ -159,9 +157,25 @@ def fuse(aot_params, cfg, opt: AoTOptions, embed: Optional[jax.Array] = None,
 
     if opt.mode == "fc":
         assert embed is not None, "FC fusion needs the embedding matrix E"
-    tables = jax.vmap(layer_table)(aot_params) if False else jnp.stack(
+    tables = jnp.stack(
         [layer_table(jax.tree.map(lambda x: x[i], aot_params)) for i in range(L)])
     return {"table": tables}
+
+
+def random_fused(cfg, embed, seed: int = 0, *, rank: int = 8,
+                 scale: float = 0.05, vocab_chunk: int = 64):
+    """Fabricate a plausibly-scaled fused task table {'table': (L, V, d)}.
+
+    Shared by demos, benchmarks, and tests that need per-task tables without
+    training: FC reparametrization params overwritten with scaled normals,
+    then fused the same way a trained task would be.
+    """
+    opt = AoTOptions(mode="fc", rank=rank, dropout=0.0)
+    pp = init(jax.random.PRNGKey(seed), cfg, opt)
+    pp = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.PRNGKey(seed + 50),
+                                    x.shape) * scale, pp)
+    return fuse(pp, cfg, opt, embed=embed, vocab_chunk=vocab_chunk)
 
 
 def stack_tasks(fused_list):

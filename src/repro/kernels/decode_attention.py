@@ -3,9 +3,15 @@
 Decode is bandwidth-bound (the whole cache is read once per token), so the
 kernel streams the cache in ``block_k`` tiles with online-softmax state in
 VMEM scratch. The KV sequence axis is the innermost (sequential) grid axis;
-blocks past ``cur_len`` are skipped with ``pl.when`` so a part-full cache
-costs only the bytes actually resident — this is what the decode_32k /
-long_500k roofline cells exercise.
+blocks past the row's ``cur_len`` are skipped with ``pl.when`` so a
+part-full cache costs only the bytes actually resident — this is what the
+decode_32k / long_500k roofline cells exercise.
+
+``cur_len`` may be a scalar (homogeneous batch) or a per-row ``(b,)``
+vector — the continuous-batching serve path, where every KV-pool slot holds
+a request at a different depth. The lengths are scalar-prefetched so each
+grid row masks/skips against its own length with no recompilation when the
+batch composition changes.
 """
 from __future__ import annotations
 
@@ -21,9 +27,9 @@ NEG = -1e30
 
 
 def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            sm_scale, block_k, nk):
+            sm_scale, block_k, nk, kvh):
     ki = pl.program_id(1)
-    cur_len = len_ref[0]
+    cur_len = len_ref[pl.program_id(0) // kvh]
 
     @pl.when(ki == 0)
     def _init():
@@ -56,7 +62,11 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 def decode_attention_kernel(q, k_cache, v_cache, cur_len, *, sm_scale=None,
                             block_k=256, interpret=False):
-    """q: (b, h, hd); caches: (b, S, kvh, hd); cur_len: scalar int32."""
+    """q: (b, h, hd); caches: (b, S, kvh, hd); cur_len: scalar or (b,) int32.
+
+    A per-row ``cur_len`` vector gives every batch row (KV-pool slot) its own
+    valid length; rows with ``cur_len <= 0`` produce zeros.
+    """
     b, h, hd = q.shape
     S, kvh = k_cache.shape[1], k_cache.shape[2]
     g = h // kvh
@@ -71,9 +81,10 @@ def decode_attention_kernel(q, k_cache, v_cache, cur_len, *, sm_scale=None,
     qf = q.reshape(b, kvh, g, hd).reshape(b * kvh, g, hd)
     kf = kk.transpose(0, 2, 1, 3).reshape(b * kvh, Sp, hd)
     vf = vv.transpose(0, 2, 1, 3).reshape(b * kvh, Sp, hd)
-    lens = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (1,))
+    lens = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
 
-    kern = functools.partial(_kernel, sm_scale=scale, block_k=block_k, nk=nk)
+    kern = functools.partial(_kernel, sm_scale=scale, block_k=block_k, nk=nk,
+                             kvh=kvh)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b * kvh, nk),

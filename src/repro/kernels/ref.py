@@ -34,15 +34,16 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, sm_scale=None):
 
 
 def decode_attention_ref(q, k_cache, v_cache, cur_len, *, sm_scale=None):
-    """q: (b, h, hd); caches (b, S, kvh, hd); cur_len: scalar valid length."""
+    """q: (b, h, hd); caches (b, S, kvh, hd); cur_len: scalar or (b,) valid lengths."""
     b, h, hd = q.shape
     S, kvh = k_cache.shape[1], k_cache.shape[2]
     g = h // kvh
     scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(hd)
     q4 = q.reshape(b, kvh, g, hd)
     s = jnp.einsum("bkgh,bskh->bkgs", q4, k_cache).astype(jnp.float32) * scale
-    ok = jnp.arange(S) < cur_len
-    s = jnp.where(ok[None, None, None, :], s, -1e30)
+    lens = jnp.broadcast_to(jnp.asarray(cur_len), (b,))
+    ok = jnp.arange(S)[None, :] < lens[:, None]
+    s = jnp.where(ok[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache)
     return o.reshape(b, h, hd)

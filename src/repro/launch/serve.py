@@ -1,11 +1,19 @@
 """Multi-task serving launcher.
 
-Loads (or fabricates, with --demo) fused AoT task tables and serves batched
-mixed-task requests from a single frozen backbone — the paper's deployment
-story as a runnable process.
+Loads (or fabricates, with --demo) fused AoT task tables and serves a
+continuous stream of mixed-task requests from a single frozen backbone —
+the paper's deployment story as a runnable process. Requests arrive as a
+Poisson process, pick a task at random, and stream their tokens through a
+callback as they decode; a static batched mode (--static) keeps the old
+all-arrive-together behavior for comparison.
 
+    # fabricated tables, continuous stream
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
-        --demo --tasks 3 --steps 8
+        --demo --tasks 3 --requests 12 --rate 0.5
+
+    # real tables exported by examples/fuse_and_export.py
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
+        --load results/fused_artifacts
 """
 from __future__ import annotations
 
@@ -16,23 +24,74 @@ import numpy as np
 
 from repro import configs
 from repro.core import aot as aot_mod
-from repro.core import peft as peft_mod
 from repro.models.model import Model, ModelOptions
 from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.scheduler import ContinuousScheduler, Request, SchedulerConfig
+
+
+def demo_tasks(cfg, params, n_tasks: int):
+    """Fabricate plausibly-scaled fused tables (no training)."""
+    return [aot_mod.random_fused(cfg, params["embed"]["tok"], seed=t,
+                                 scale=0.03, vocab_chunk=4096)
+            for t in range(n_tasks)]
+
+
+def load_tasks(cfg, directory: str):
+    """Load fused task tables written by examples/fuse_and_export.py
+    (one checkpoint step per task)."""
+    from repro.checkpoint.manager import CheckpointManager
+    mgr = CheckpointManager(directory, async_save=False)
+    steps = mgr.all_steps()
+    if not steps:
+        raise FileNotFoundError(
+            f"no fused-table checkpoints under {directory!r}; run "
+            "examples/fuse_and_export.py first (or pass --demo)")
+    like = {"table": np.zeros(
+        (cfg.num_layers, cfg.vocab_size, cfg.d_model), np.float32)}
+    tasks = []
+    for s in steps:
+        tree, extra = mgr.restore(like, step=s)
+        print(f"  step {s}: fused {extra.get('mode', '?')} tables "
+              f"({extra.get('arch', '?')})")
+        tasks.append(tree)
+    return tasks
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--demo", action="store_true",
-                    help="fabricate random task tables instead of loading")
-    ap.add_argument("--tasks", type=int, default=3)
-    ap.add_argument("--batch", type=int, default=6)
-    ap.add_argument("--prompt", type=int, default=16)
-    ap.add_argument("--steps", type=int, default=8)
+    src = ap.add_argument_group("task tables (one of)")
+    src.add_argument("--demo", action="store_true",
+                     help="fabricate random task tables instead of loading")
+    src.add_argument("--load", metavar="DIR",
+                     help="load fused tables exported by examples/"
+                          "fuse_and_export.py (one checkpoint step per task)")
+    ap.add_argument("--tasks", type=int, default=3,
+                    help="number of fabricated tasks (--demo only)")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="mean arrivals per decode step (Poisson stream)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="KV-pool slots (continuous batch capacity)")
+    ap.add_argument("--prompt", type=int, default=16,
+                    help="max prompt length (sampled 4..this)")
+    ap.add_argument("--steps", type=int, default=8,
+                    help="max new tokens per request (sampled 2..this)")
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--static", action="store_true",
+                    help="old behavior: one static batch, uniform lengths")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress per-token streaming output")
     args = ap.parse_args()
+
+    if not args.demo and not args.load:
+        ap.error("pass --demo (fabricated tables) or --load DIR "
+                 "(fused tables from examples/fuse_and_export.py)")
+    if args.prompt + args.steps - 1 > args.max_len:
+        ap.error(f"--prompt {args.prompt} + --steps {args.steps} cannot fit "
+                 f"--max-len {args.max_len}; raise --max-len or shrink the "
+                 "requests")
 
     cfg = configs.get(args.arch)
     if args.reduced:
@@ -40,30 +99,52 @@ def main():
     model = Model(cfg, ModelOptions(chunk_q=64, chunk_kv=args.max_len))
     params = model.init(jax.random.PRNGKey(0))
 
-    assert args.demo, "non-demo mode expects fused tables from fuse_and_export"
-    tasks = []
-    for t in range(args.tasks):
-        opt = aot_mod.AoTOptions(mode="fc", rank=8, dropout=0.0)
-        pp = peft_mod.init(jax.random.PRNGKey(t), cfg,
-                           peft_mod.PEFTOptions(method="aot", aot=opt))
-        pp["aot"] = jax.tree.map(
-            lambda x, t=t: jax.random.normal(jax.random.PRNGKey(40 + t),
-                                             x.shape) * 0.03, pp["aot"])
-        tasks.append(aot_mod.fuse(pp["aot"], cfg, opt,
-                                  embed=params["embed"]["tok"],
-                                  vocab_chunk=4096))
-    print(f"serving {args.tasks} tasks; fused tables "
-          f"{aot_mod.table_bytes(cfg, args.tasks, 2) / 1e6:.1f} MB total")
+    tasks = (demo_tasks(cfg, params, args.tasks) if args.demo
+             else load_tasks(cfg, args.load))
+    n_tasks = len(tasks)
+    print(f"serving {n_tasks} tasks; fused tables "
+          f"{aot_mod.table_bytes(cfg, n_tasks, 2) / 1e6:.1f} MB total")
 
     eng = ServeEngine(model, params, ServeConfig(max_len=args.max_len),
                       fused_tasks=tasks)
     rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab_size,
-                           (args.batch, args.prompt)).astype(np.int32)
-    task_ids = rng.integers(0, args.tasks, args.batch).astype(np.int32)
-    out = eng.generate(prompts, args.steps, task_ids)
-    for i in range(args.batch):
-        print(f"req {i} task={task_ids[i]}: {out[i].tolist()}")
+
+    if args.static:
+        prompts = rng.integers(0, cfg.vocab_size,
+                               (args.requests, args.prompt)).astype(np.int32)
+        task_ids = rng.integers(0, n_tasks, args.requests).astype(np.int32)
+        out = eng.generate(prompts, args.steps, task_ids)
+        for i in range(args.requests):
+            print(f"req {i} task={task_ids[i]}: {out[i].tolist()}")
+        return
+
+    # ---- continuous stream: Poisson arrivals, mixed tasks, streaming ----
+    def on_token(req, tok):
+        if not args.quiet:
+            print(f"  [stream] req {req.rid} task={req.task_id} "
+                  f"tok#{len(req.out)}: {tok}")
+
+    arrivals, t = [], 0.0
+    for i in range(args.requests):
+        t += rng.exponential(1.0 / max(args.rate, 1e-6))
+        plen = int(rng.integers(4, args.prompt + 1))
+        req = Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+            task_id=int(rng.integers(0, n_tasks)),
+            max_new_tokens=int(rng.integers(2, args.steps + 1)),
+            on_token=on_token)
+        arrivals.append((int(t), req))
+
+    sched = ContinuousScheduler(eng, SchedulerConfig(num_slots=args.slots))
+    finished = sched.run_stream(arrivals)
+    print(f"\nserved {len(finished)} requests in {sched.steps_decoded} mixed "
+          f"decode steps ({sched.tokens_emitted} tokens, "
+          f"capacity {args.slots} slots)")
+    for rid in sorted(finished):
+        req = finished[rid]
+        ms = (req.t_done - req.t_submit) * 1e3
+        print(f"req {rid} task={req.task_id} plen={len(req.prompt)} "
+              f"latency={ms:.0f}ms: {req.out}")
 
 
 if __name__ == "__main__":

@@ -295,7 +295,9 @@ def attention_decode(q, k_cache, v_cache, cur_len, *, window=0, softcap=0.0):
     """Single-token decode attention against a cache.
 
     q: (b, 1, H, hd); caches: (b, S, KV, hd); cur_len: scalar int32 — number
-    of valid positions (the new token's kv already written at cur_len-1).
+    of valid positions (the new token's kv already written at cur_len-1) —
+    or a per-row (b,) vector for mixed-depth batches (the continuous-batching
+    serve path, where every KV-pool slot is at a different depth).
     For ring-buffer SWA caches the whole buffer is valid once full; masking
     uses cur_len against the buffer size.
     """
@@ -307,10 +309,18 @@ def attention_decode(q, k_cache, v_cache, cur_len, *, window=0, softcap=0.0):
     if softcap:
         s = jnp.tanh(s / softcap) * softcap
     pos = jnp.arange(S)
-    ok = pos < cur_len
-    if window:
-        ok &= pos > cur_len - 1 - window
-    s = jnp.where(ok[None, None, None, None, :], s, NEG_INF)
+    cl = jnp.asarray(cur_len)
+    if cl.ndim == 0:
+        ok = pos < cl
+        if window:
+            ok &= pos > cl - 1 - window
+        mask = ok[None, None, None, None, :]
+    else:
+        ok = pos[None, :] < cl[:, None]
+        if window:
+            ok &= pos[None, :] > (cl - 1 - window)[:, None]
+        mask = ok[:, None, None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v_cache.dtype), v_cache)
     return out.reshape(b, 1, h, hd)

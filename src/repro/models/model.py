@@ -279,16 +279,28 @@ class Model:
             is_ring = (cfg.attn_kind == "swa" and opts.swa_ring_cache
                        and cfg.sliding_window and S_c == cfg.sliding_window)
             slot = decode_pos % S_c if is_ring else decode_pos
-            kc = jax.lax.dynamic_update_slice(cache_u["k"], k.astype(cache_u["k"].dtype),
-                                              (0, slot, 0, 0))
-            vc = jax.lax.dynamic_update_slice(cache_u["v"], v.astype(cache_u["v"].dtype),
-                                              (0, slot, 0, 0))
+            if jnp.ndim(decode_pos) == 0:
+                kc = jax.lax.dynamic_update_slice(cache_u["k"], k.astype(cache_u["k"].dtype),
+                                                  (0, slot, 0, 0))
+                vc = jax.lax.dynamic_update_slice(cache_u["v"], v.astype(cache_u["v"].dtype),
+                                                  (0, slot, 0, 0))
+            else:
+                # per-row positions (KV-pool slots at mixed depths): scatter
+                # each row's new kv at its own slot.
+                rows = jnp.arange(b)
+                kc = cache_u["k"].at[rows, slot].set(k[:, 0].astype(cache_u["k"].dtype))
+                vc = cache_u["v"].at[rows, slot].set(v[:, 0].astype(cache_u["v"].dtype))
             cur = decode_pos + 1
             if is_ring:     # buffer IS the window: every resident entry valid
-                o = L.attention_decode(q, kc, vc, jnp.minimum(cur, S_c),
-                                       window=0, softcap=softcap)
+                valid, eff_window = jnp.minimum(cur, S_c), 0
             else:
-                o = L.attention_decode(q, kc, vc, cur, window=window, softcap=softcap)
+                valid, eff_window = cur, window
+            if opts.attn_impl == "pallas" and not eff_window and not softcap:
+                from repro.kernels import ops as kops
+                o = kops.decode_attention(q[:, 0], kc, vc, valid)[:, None]
+            else:
+                o = L.attention_decode(q, kc, vc, valid, window=eff_window,
+                                       softcap=softcap)
             new_cache = {"k": kc, "v": vc}
         else:
             # ---- full / prefill ----
@@ -610,8 +622,13 @@ class Model:
         # scan xs need leaves (R, ...) with unit positions as a dict level.
         return {k: v for k, v in g.items()}
 
-    def prefill(self, params, batch, peft=None, *, max_len: int):
-        """Run the prompt, build the cache. Returns (last_logits, cache, pos)."""
+    def prefill(self, params, batch, peft=None, *, max_len: int, last_pos=None):
+        """Run the prompt, build the cache. Returns (last_logits, cache, pos).
+
+        ``last_pos`` (traced scalar) selects which position's logits to
+        return instead of the final one — used by the continuous scheduler,
+        whose prompts are right-padded to a bucket length (causality makes
+        positions <= last_pos independent of the padding)."""
         self.decode_max_len = max_len
         cache = self.init_cache(_batch_size(batch), max_len)
         h, ids, e_rows, positions, prompt_len = self._embed(params, batch, peft)
@@ -624,7 +641,11 @@ class Model:
                 decode_pos=None, prompt_len=prompt_len)
             new_cache.append(_xs_to_unitdict(gc))
         h = L.apply_norm(self.cfg, params["final_norm"], h)
-        logits = self.unembed(params, h[:, -1:])
+        if last_pos is None:
+            h_last = h[:, -1:]
+        else:
+            h_last = jax.lax.dynamic_slice_in_dim(h, last_pos, 1, axis=1)
+        logits = self.unembed(params, h_last)
         n = batch_len(batch)
         if peft and peft["method"] == "ptv2":   # prefix kv occupies cache slots
             n += peft["opt"].prompt_len
@@ -634,8 +655,10 @@ class Model:
     def decode_step(self, params, tokens, pos, cache, peft=None,
                     rope_pos=None, extra: Optional[dict] = None):
         """One decode step. tokens: (b, 1); pos: scalar int32 — cache slot of
-        the new token (``rope_pos`` overrides the positional index when they
-        differ, e.g. ptv2 prefixes occupy cache slots but not rope positions).
+        the new token — or a per-row (b,) vector when every row sits at its
+        own depth (continuous batching over a slotted KV pool). ``rope_pos``
+        overrides the positional index when they differ, e.g. ptv2 prefixes
+        occupy cache slots but not rope positions.
         Returns (logits (b,1,V), new_cache)."""
         cfg = self.cfg
         dt = self.opts.compute_dtype
@@ -649,9 +672,15 @@ class Model:
         if cfg.embed_scale:
             h = h * jnp.asarray(math.sqrt(cfg.d_model), dt)
         rp = rope_pos if rope_pos is not None else pos
-        positions = rp[None] if rp.ndim == 0 else rp
+        if rp.ndim == 0:
+            positions = rp[None]            # (1,): shared across the batch
+        elif jnp.ndim(pos) == 1 and rp.shape[0] == tokens.shape[0]:
+            positions = rp[:, None]         # (b, 1): per-row positions
+        else:
+            positions = rp
         if cfg.pos_type == "learned":
-            h = h + jnp.take(params["embed"]["pos"], positions, axis=0).astype(dt)[None]
+            pe = jnp.take(params["embed"]["pos"], positions, axis=0).astype(dt)
+            h = h + (pe if pe.ndim == 3 else pe[None])
         new_cache = []
         for gi, plan in enumerate(self.plan):
             gcache = _unitdict_to_xs(cache[gi])

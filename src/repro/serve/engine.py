@@ -6,6 +6,17 @@ are indexed per (task, token) during both prefill and decode, at gather+add
 cost. No extra sequence length (vs P-Tuning), no extra matmuls (vs
 LoRA-unfused/Adapters) — the zero-cost property of Table 1.
 
+Two serving modes share the same jitted model functions:
+
+  * ``generate``: static batch — every request arrives together, shares one
+    prompt length, finishes together (the paper's benchmark setting).
+  * the continuous path (``prefill_request`` + ``decode_mixed``), driven by
+    :mod:`repro.serve.scheduler`: requests at heterogeneous depths occupy
+    slots of a :class:`repro.serve.kv_pool.SlotKVPool`; one mixed decode
+    step advances every occupied slot with per-slot positions and per-slot
+    task ids. Because the AoT bias is a per-(task, token) gather, a mixed-
+    task batch costs exactly what a single-task batch costs.
+
 The engine also serves the baselines for the overhead benchmarks
 (Fig. 3): ptv2 (longer effective KV), lora-unfused (extra matmuls),
 bitfit, and plain backbone.
@@ -13,8 +24,7 @@ bitfit, and plain backbone.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Dict, List, Optional
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +60,7 @@ class ServeEngine:
             self.multitask = False
         self._decode = jax.jit(self._decode_impl)
         self._prefill = jax.jit(self._prefill_impl)
+        self._prefill_at = jax.jit(self._prefill_at_impl)
 
     # ------------------------------------------------------------------
     def _peft_for(self, task_ids):
@@ -66,10 +77,18 @@ class ServeEngine:
         peft = self._peft_for(task_ids)
         return self.model.prefill(params, batch, peft, max_len=self.cfg.max_len)
 
+    def _prefill_at_impl(self, params, tokens, last_pos, task_ids):
+        """Bucket prefill: logits taken at ``last_pos`` (last real token)."""
+        peft = self._peft_for(task_ids)
+        return self.model.prefill(params, {"tokens": tokens}, peft,
+                                  max_len=self.cfg.max_len, last_pos=last_pos)
+
     def _decode_impl(self, params, tokens, pos, cache, task_ids):
         peft = self._peft_for(task_ids)
         return self.model.decode_step(params, tokens, pos, cache, peft)
 
+    # ------------------------------------------------------------------
+    # static-batch serving (the paper's benchmark setting)
     # ------------------------------------------------------------------
     def generate(self, prompts: np.ndarray, steps: int,
                  task_ids: Optional[np.ndarray] = None) -> np.ndarray:
@@ -85,6 +104,39 @@ class ServeEngine:
             logits, cache = self._decode(self.params, tok, pos + i, cache, tids)
             tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         return np.asarray(jnp.concatenate(out, axis=1))
+
+    # ------------------------------------------------------------------
+    # continuous-batching primitives (driven by serve.scheduler)
+    # ------------------------------------------------------------------
+    def prefill_request(self, tokens: np.ndarray, length: int,
+                        task_id: int) -> Tuple[int, Any]:
+        """Prefill one bucket-padded prompt. tokens: (1, bucket) int32;
+        ``length``: real prompt tokens. Returns (first greedy token, cache).
+
+        One compilation per distinct bucket length; padding is inert under
+        causal attention, so logits at ``length - 1`` and KV rows
+        ``[0, length)`` match an unpadded prefill bitwise."""
+        tids = jnp.full((1,), task_id, jnp.int32)
+        logits, cache, _ = self._prefill_at(
+            self.params, jnp.asarray(tokens), jnp.asarray(length - 1, jnp.int32),
+            tids)
+        tok = int(jax.device_get(jnp.argmax(logits[0, -1])))
+        return tok, cache
+
+    def decode_mixed(self, tokens: np.ndarray, pos: np.ndarray, cache,
+                     task_ids: np.ndarray):
+        """One mixed step over all pool slots.
+
+        tokens: (num_slots, 1) last token per slot; pos: (num_slots,) per-slot
+        depths (== cur_len; the new KV row is written there); task_ids:
+        (num_slots,). Free slots ride along with pos=0 and are ignored by the
+        caller. Returns (next greedy token per slot (num_slots,), new cache)."""
+        logits, cache = self._decode(
+            self.params, jnp.asarray(tokens), jnp.asarray(pos, np.int32),
+            cache, jnp.asarray(task_ids, np.int32))
+        toks = np.asarray(jax.device_get(
+            jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)))
+        return toks, cache
 
     def serve_step_fn(self):
         """The raw jit'd decode step (used by benchmarks and the dry-run)."""

@@ -1,0 +1,120 @@
+"""Slotted KV pool: fixed-capacity decode caches for continuous batching.
+
+The pool owns one model cache pytree sized ``(num_slots, max_len)`` — every
+leaf keeps the slot (batch) axis at position 1, after the per-layer repeats
+axis — plus per-slot ``cur_len`` / ``task_id`` host arrays and a free list.
+Admitting a request allocates a slot and copies the request's prefilled
+cache into it in place (``dynamic_update_slice`` on a traced slot index, so
+batch composition changes never recompile); decode appends happen inside
+the engine's mixed step, which scatters each slot's new KV row at that
+slot's own depth.
+
+Slot bookkeeping (alloc/free, lengths, task ids) is deliberately host-side
+numpy: it is O(num_slots) integers, mutated between device steps, and the
+decode step only consumes it as two small ``(num_slots,)`` vectors.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Set
+
+import jax
+import numpy as np
+
+
+def _write_slot_impl(pool_cache, req_cache, slot):
+    """Copy a batch=1 prefill cache into ``slot`` of the pool cache.
+
+    Leaves are (repeats, batch, ...); the update writes at offset 0 on every
+    axis except the slot axis, so a prefill cache with a shorter sequence
+    axis (chunked prefill) lands at the front of the slot's KV rows.
+    """
+    def wr(p, c):
+        start = (0, slot) + (0,) * (p.ndim - 2)
+        return jax.lax.dynamic_update_slice(p, c.astype(p.dtype), start)
+    return jax.tree.map(wr, pool_cache, req_cache)
+
+
+_WRITE_SLOT = None
+
+
+def _write_slot(pool_cache, req_cache, slot):
+    global _WRITE_SLOT
+    if _WRITE_SLOT is None:
+        # donate the pool buffers so the in-place write never doubles HBM;
+        # CPU (tests) has no donation support, so skip it there
+        donate = (0,) if jax.default_backend() == "tpu" else ()
+        _WRITE_SLOT = jax.jit(_write_slot_impl, donate_argnums=donate)
+    return _WRITE_SLOT(pool_cache, req_cache, slot)
+
+
+class SlotKVPool:
+    """Fixed-capacity slotted decode cache shared by all in-flight requests."""
+
+    def __init__(self, model, num_slots: int, max_len: int):
+        self.model = model
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.cache = model.init_cache(num_slots, max_len)
+        self.cur_len = np.zeros(num_slots, np.int32)
+        self.task_id = np.zeros(num_slots, np.int32)
+        self._free: List[int] = list(range(num_slots - 1, -1, -1))
+        self._used: Set[int] = set()
+
+    # ------------------------------------------------------------------
+    # slot lifecycle
+    # ------------------------------------------------------------------
+    def has_free(self) -> bool:
+        return bool(self._free)
+
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def occupied(self) -> List[int]:
+        return sorted(self._used)
+
+    def alloc(self, task_id: int = 0) -> Optional[int]:
+        """Claim a slot (None when full). cur_len starts at 0 until prefill."""
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._used.add(slot)
+        self.task_id[slot] = task_id
+        self.cur_len[slot] = 0
+        return slot
+
+    def free(self, slot: int) -> None:
+        if slot not in self._used:
+            raise ValueError(f"slot {slot} is not allocated")
+        self._used.remove(slot)
+        self.cur_len[slot] = 0
+        self.task_id[slot] = 0
+        self._free.append(slot)
+
+    # ------------------------------------------------------------------
+    # cache writes
+    # ------------------------------------------------------------------
+    def write_prefill(self, slot: int, req_cache: Any, length: int) -> None:
+        """Install a request's prefilled cache into its slot.
+
+        ``length`` is the number of *real* prompt tokens; KV rows past it
+        (bucket padding) stay masked by ``cur_len`` until decode overwrites
+        them."""
+        if length > self.max_len:
+            raise ValueError(f"prompt length {length} exceeds pool max_len "
+                             f"{self.max_len}")
+        self.cache = _write_slot(self.cache, req_cache, slot)
+        self.cur_len[slot] = length
+
+    def advance(self, slots) -> None:
+        """Record one decode append for each slot in ``slots``."""
+        for s in slots:
+            self.cur_len[s] += 1
+
+    # ------------------------------------------------------------------
+    def check_no_leaks(self) -> None:
+        """Invariant: every slot is exactly one of free/used (tests)."""
+        free = set(self._free)
+        assert len(self._free) == len(free), "duplicate slots on free list"
+        assert not (free & self._used), "slot both free and used"
+        assert free | self._used == set(range(self.num_slots)), "lost slot"
+        assert all(self.cur_len[s] == 0 for s in free), "freed slot has length"

@@ -1,0 +1,200 @@
+"""Continuous-batching scheduler: queue → admit → prefill → decode → finish.
+
+Static batching forces every request to arrive together, share one prompt
+length, and finish together. This scheduler serves realistic traffic: each
+request carries its own ``task_id``, prompt, and ``max_new_tokens``; new
+requests are admitted into free KV-pool slots *between* decode steps
+(bucket-padded prefill, one compilation per bucket), and every decode step
+is ONE jitted mixed pass over all occupied slots with per-slot positions
+and the multitask AoT gather routed by the slot task-id vector.
+
+Because the AoT bias is a per-(task, token) gather from the fused tables
+(paper Eq. 1), the mixed-task batch costs exactly what a single-task batch
+costs — no extra KV length (P-Tuning v2), no per-task matmuls (unfused
+LoRA/Adapters). That zero-cost property is what makes continuous batching
+across tasks free, not just across lengths.
+
+Greedy decode here is token-for-token identical to per-request static
+``ServeEngine.generate``: bucket padding is inert under causal attention,
+per-slot decode writes/reads the same cache rows a dedicated cache would,
+and masked (invalid) rows never contribute (see tests/test_serve_scheduler).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.engine import ServeEngine
+from repro.serve.kv_pool import SlotKVPool
+
+QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
+
+
+@dataclass
+class Request:
+    """One serving request. ``on_token`` streams tokens as they decode."""
+    rid: int
+    prompt: np.ndarray                  # (s,) int32
+    task_id: int = 0
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    on_token: Optional[Callable[["Request", int], None]] = None
+    # filled in by the scheduler
+    out: List[int] = field(default_factory=list)
+    state: str = QUEUED
+    slot: int = -1
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    num_slots: int = 8                  # batch capacity (KV pool slots)
+    bucket_min: int = 16                # smallest prefill bucket (doubles up)
+    admit_per_step: int = 0             # max prefills between decode steps
+                                        # (0 = fill every free slot)
+
+
+class ContinuousScheduler:
+    """Drives a ServeEngine + SlotKVPool over an online request stream."""
+
+    def __init__(self, engine: ServeEngine, cfg: SchedulerConfig = SchedulerConfig()):
+        mcfg = engine.model.cfg
+        assert mcfg.causal, (
+            "continuous batching pads prompts to buckets; that is only "
+            "inert under causal attention")
+        assert not mcfg.prefix_lm_len, (
+            f"{mcfg.name}: a bidirectional prefix ({mcfg.prefix_lm_len} "
+            "tokens) attends to bucket padding; continuous batching needs "
+            "fully-causal attention")
+        kinds = {k for plan in engine.model.plan for k in plan.kinds}
+        assert kinds <= {"attn"}, (
+            f"{mcfg.name}: recurrent blocks ({kinds - {'attn'}}) fold bucket "
+            "padding into their state; continuous batching needs "
+            "attention-only stacks (or exact-length prefill) for now")
+        assert mcfg.frontend != "audio_frames", "token requests only"
+        method = engine.peft["method"] if engine.peft else "none"
+        assert method not in ("ptv1", "ptv2"), (
+            f"{method}: prompt/prefix tuning changes cache layout per "
+            "request; serve it with static batches")
+        self.engine = engine
+        self.cfg = cfg
+        self.max_len = engine.cfg.max_len
+        self.pool = SlotKVPool(engine.model, cfg.num_slots, self.max_len)
+        self.queue: deque = deque()
+        self.running: Dict[int, Request] = {}        # slot -> request
+        self.finished: Dict[int, Request] = {}       # rid -> request
+        self.slot_tokens = np.zeros((cfg.num_slots, 1), np.int32)
+        self.clock = 0                               # decode-step counter
+        self.steps_decoded = 0
+        self.tokens_emitted = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        s = len(req.prompt)
+        assert s >= 1, "empty prompt"
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens must be >= 1 "
+                f"(got {req.max_new_tokens})")
+        # the last generated token is emitted without being fed back, so the
+        # deepest KV row written is prompt + max_new - 2
+        if s + req.max_new_tokens - 1 > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {s} + {req.max_new_tokens} new "
+                f"tokens does not fit max_len {self.max_len}")
+        req.state = QUEUED
+        req.t_submit = time.perf_counter()
+        self.queue.append(req)
+
+    def _bucket(self, length: int) -> int:
+        b = self.cfg.bucket_min
+        while b < length:
+            b *= 2
+        return min(b, self.max_len)
+
+    def _emit(self, req: Request, tok: int) -> bool:
+        """Record one generated token; returns True when the request is done."""
+        if not req.out:
+            req.t_first = time.perf_counter()
+        req.out.append(tok)
+        self.tokens_emitted += 1
+        if req.on_token is not None:
+            req.on_token(req, tok)
+        done = len(req.out) >= req.max_new_tokens or (
+            req.eos_id is not None and tok == req.eos_id)
+        return done
+
+    def _finish(self, req: Request) -> None:
+        self.running.pop(req.slot, None)
+        self.pool.free(req.slot)
+        req.state = FINISHED
+        req.t_done = time.perf_counter()
+        self.finished[req.rid] = req
+
+    def _admit_one(self) -> None:
+        req: Request = self.queue.popleft()
+        slot = self.pool.alloc(req.task_id)
+        assert slot is not None
+        s = len(req.prompt)
+        bucket = self._bucket(s)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :s] = req.prompt
+        tok, cache = self.engine.prefill_request(toks, s, req.task_id)
+        self.pool.write_prefill(slot, cache, s)
+        req.state, req.slot = RUNNING, slot
+        self.running[slot] = req
+        self.slot_tokens[slot, 0] = tok
+        if self._emit(req, tok):
+            self._finish(req)
+
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        """Admit new requests into free slots, then run one mixed decode
+        step over every occupied slot."""
+        lim = self.cfg.admit_per_step or self.cfg.num_slots
+        admitted = 0
+        while self.queue and self.pool.has_free() and admitted < lim:
+            self._admit_one()
+            admitted += 1
+        if self.running:
+            toks, cache = self.engine.decode_mixed(
+                self.slot_tokens, self.pool.cur_len, self.pool.cache,
+                self.pool.task_id)
+            self.pool.cache = cache
+            active = list(self.running.items())
+            self.pool.advance([s for s, _ in active])
+            self.steps_decoded += 1
+            for slot, req in active:
+                tok = int(toks[slot])
+                self.slot_tokens[slot, 0] = tok
+                if self._emit(req, tok):
+                    self._finish(req)
+        self.clock += 1
+
+    def run(self) -> Dict[int, Request]:
+        """Drain everything currently submitted."""
+        while self.queue or self.running:
+            self.step()
+        return self.finished
+
+    def run_stream(self, arrivals: List[Tuple[int, Request]]) -> Dict[int, Request]:
+        """Serve a timed stream: ``(arrival_step, request)`` pairs, arrival
+        measured on the scheduler's decode-step clock. Requests join the
+        running batch as their arrival step passes; idle gaps fast-forward."""
+        order = sorted(range(len(arrivals)), key=lambda i: arrivals[i][0])
+        i = 0
+        while i < len(order) or self.queue or self.running:
+            if (not self.queue and not self.running and i < len(order)
+                    and arrivals[order[i]][0] > self.clock):
+                self.clock = arrivals[order[i]][0]       # idle: fast-forward
+            while i < len(order) and arrivals[order[i]][0] <= self.clock:
+                self.submit(arrivals[order[i]][1])
+                i += 1
+            self.step()
+        return self.finished

@@ -72,7 +72,10 @@ def test_swa_flops_scale_with_window(rng):
         kv = jax.ShapeDtypeStruct((1, s, 1, 32), jnp.float32)
         f = lambda q, k, v: L.attention_chunked(
             q, k, v, causal=True, window=window, chunk_q=256, chunk_kv=s)
-        return jax.jit(f).lower(q, kv, kv).compile().cost_analysis()["flops"]
+        ca = jax.jit(f).lower(q, kv, kv).compile().cost_analysis()
+        if isinstance(ca, list):   # older jax returned one dict per device
+            ca = ca[0]
+        return ca["flops"]
     f2k = flops(2048, 256)
     f8k = flops(8192, 256)
     # linear in s (not quadratic): 4x tokens => ~4x flops, allow 1.6x slack

@@ -47,6 +47,22 @@ def test_decode_attention(rng, b, h, kvh, hd, S, cur, dtype):
                                atol=tol, rtol=tol)
 
 
+@pytest.mark.parametrize("b,h,kvh,hd,S", [(4, 4, 2, 16, 64), (3, 2, 2, 8, 40),
+                                          (2, 8, 1, 32, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_ragged_lens(rng, b, h, kvh, hd, S, dtype):
+    """Per-row cur_len vector (the continuous-batching serve path)."""
+    t = lambda *sh: jnp.asarray(rng.normal(size=sh), dtype)
+    q, kc, vc = t(b, h, hd), t(b, S, kvh, hd), t(b, S, kvh, hd)
+    lens = jnp.asarray(rng.integers(1, S + 1, (b,)), jnp.int32)
+    ref = R.decode_attention_ref(q.astype(jnp.float32), kc.astype(jnp.float32),
+                                 vc.astype(jnp.float32), lens)
+    out = decode_attention_kernel(q, kc, vc, lens, block_k=16, interpret=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out, np.float32),
+                               atol=tol, rtol=tol)
+
+
 @pytest.mark.parametrize("T,V,d", [(16, 50, 32), (7, 13, 8), (64, 100, 128),
                                    (128, 1000, 64)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

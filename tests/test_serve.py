@@ -12,14 +12,7 @@ from repro.serve.engine import ServeConfig, ServeEngine
 
 
 def _fused_task(cfg, params, seed):
-    opt = P.PEFTOptions(method="aot", aot=A.AoTOptions(mode="fc", rank=8,
-                                                       dropout=0.0))
-    pp = P.init(jax.random.PRNGKey(seed), cfg, opt)
-    pp["aot"] = jax.tree.map(
-        lambda x: jax.random.normal(jax.random.PRNGKey(seed + 50), x.shape) * 0.05,
-        pp["aot"])
-    return A.fuse(pp["aot"], cfg, opt.aot, embed=params["embed"]["tok"],
-                  vocab_chunk=64)
+    return A.random_fused(cfg, params["embed"]["tok"], seed=seed)
 
 
 def test_generate_shapes(rng, tiny_lm):
