@@ -1,27 +1,38 @@
 """Paper §3.1 / Table 1: multi-task inference with one backbone.
 
-Three comparisons:
+Four comparisons:
 
   (a) one batched multi-task pass over mixed task ids vs sequential
       per-task batches — the resource-allocation win the paper argues for;
-  (b) continuous batching (slotted KV pool, requests admitted between
-      decode steps) vs static batching at EQUAL batch capacity, over a
-      workload with heterogeneous output lengths — tokens/s;
+  (b) continuous batching (KV pool, requests admitted between decode
+      steps) vs static batching at EQUAL batch capacity, over a workload
+      with heterogeneous output lengths — tokens/s;
   (c) request latency (p50/p99) under a Poisson arrival stream at varying
-      offered load and task counts.
+      offered load and task counts;
+  (d) paged vs contiguous KV at an EQUAL HBM budget — concurrent requests
+      in flight and HBM bytes per request for a short-prompt/long-max_len
+      workload (where contiguous slots waste almost the whole region).
 
-Also reports the fused-table residency cost (paper §3.3 RAM trade-off).
+Also reports the fused-table residency cost (paper §3.3 RAM trade-off),
+and writes every serving number to ``BENCH_serve.json`` at the repo root
+so the perf trajectory is machine-trackable across PRs.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
 
 from benchmarks.common import bench_model, emit, random_aot_fused, time_fn
 from repro.core import aot as A
+from repro.kernels.decode_attention import round_kv_len
 from repro.serve.engine import ServeConfig, ServeEngine
 from repro.serve.scheduler import ContinuousScheduler, Request, SchedulerConfig
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+RESULTS: dict = {"schema": 1, "bench": "multitask_serving"}
 
 
 def _requests(rng, cfg, n, n_tasks, prompt, max_new_lo, max_new_hi):
@@ -87,10 +98,16 @@ def run_continuous_vs_static(n_tasks=4, slots=4, n_requests=16, prompt=16,
          f"tok_per_s={tput_stat:.0f} slots={slots} requests={n_requests}")
     emit("multitask/continuous_speedup", 0.0,
          f"x={us_stat / us_cont:.2f}")
+    RESULTS["continuous_vs_static"] = {
+        "slots": slots, "requests": n_requests,
+        "continuous_tok_per_s": round(tput_cont, 1),
+        "static_tok_per_s": round(tput_stat, 1),
+        "speedup": round(us_stat / us_cont, 3)}
 
     # ---- (c) latency under Poisson offered load ----
     # reuses ``eng`` so its jit caches stay warm: latency percentiles must
     # measure serving, not the first request's compilation
+    RESULTS["latency"] = []
     for rate in rates:
         for nt in sorted({1, n_tasks}):
             arrivals, t = [], 0.0
@@ -107,6 +124,95 @@ def run_continuous_vs_static(n_tasks=4, slots=4, n_requests=16, prompt=16,
             emit(f"multitask/latency_rate{rate}_tasks{nt}", 0.0,
                  f"p50_ms={p50:.1f} p99_ms={p99:.1f} "
                  f"steps={sched.steps_decoded}")
+            RESULTS["latency"].append({
+                "rate": rate, "tasks": nt, "p50_ms": round(p50, 2),
+                "p99_ms": round(p99, 2), "steps": sched.steps_decoded})
+
+
+def _drain_tracking_peak(sched):
+    """Run a scheduler to empty, tracking peak concurrency and peak pages."""
+    peak_pages = 0
+    while sched.queue or sched.running or sched._prefilling is not None:
+        sched.step()
+        if sched.paged:
+            peak_pages = max(peak_pages, sched.pool.blocks_in_use())
+    return sched.peak_running, peak_pages
+
+
+def run_paged_equal_hbm(n_tasks=2, contig_slots=2, max_len=256, prompt=8,
+                        max_new=8, n_requests=24, block_size=16):
+    """(d) the paged-KV capacity claim: at an equal KV HBM budget, a
+    short-prompt workload sustains >= 2x the concurrent requests because
+    pages are claimed per resident token, not per slot * max_len."""
+    cfg, model, params = bench_model(d_model=128, layers=4, vocab=512, heads=4,
+                                     kv=2)
+    rng = np.random.default_rng(0)
+    tasks = [random_aot_fused(cfg, params, seed=t) for t in range(n_tasks)]
+    eng = ServeEngine(model, params, ServeConfig(max_len=max_len),
+                      fused_tasks=tasks)
+
+    # equal HBM budget: what contig_slots contiguous max_len regions cost
+    budget_tokens = contig_slots * round_kv_len(max_len)
+    num_blocks = budget_tokens // block_size + 1      # +1: scratch page 0
+    paged_slots = min(n_requests, budget_tokens // block_size)
+
+    def reqs():
+        return _requests(rng, cfg, n_requests, n_tasks, prompt,
+                         max_new, max_new)
+
+    def serve(cfg_s):
+        sched = ContinuousScheduler(eng, cfg_s)
+        for r in reqs():
+            sched.submit(r)
+        t0 = time.perf_counter()
+        peak_run, peak_pages = _drain_tracking_peak(sched)
+        dt = time.perf_counter() - t0
+        return sched, peak_run, peak_pages, sched.tokens_emitted / dt
+
+    # warm both layouts' compilations out of the measurement
+    serve(SchedulerConfig(num_slots=contig_slots, kv_layout="slots"))
+    serve(SchedulerConfig(num_slots=paged_slots, kv_layout="paged",
+                          block_size=block_size, num_blocks=num_blocks,
+                          prefill_chunk=block_size))
+
+    sc, peak_c, _, tput_c = serve(
+        SchedulerConfig(num_slots=contig_slots, kv_layout="slots"))
+    sp, peak_p, peak_pages, tput_p = serve(
+        SchedulerConfig(num_slots=paged_slots, kv_layout="paged",
+                        block_size=block_size, num_blocks=num_blocks,
+                        prefill_chunk=block_size))
+
+    bpt = sp.pool.kv_bytes_per_token()
+    hbm_budget = budget_tokens * bpt
+    hbm_per_req_c = sc.pool.alloc_len * bpt
+    hbm_per_req_p = (peak_pages * block_size * bpt) / max(peak_p, 1)
+    emit("multitask/paged_equal_hbm", 0.0,
+         f"contig_peak={peak_c} paged_peak={peak_p} "
+         f"ratio={peak_p / max(peak_c, 1):.1f}x budget_kib={hbm_budget / 1024:.0f}")
+    emit("multitask/paged_hbm_per_request", 0.0,
+         f"contig_kib={hbm_per_req_c / 1024:.1f} "
+         f"paged_kib={hbm_per_req_p / 1024:.1f}")
+    RESULTS["paged_equal_hbm"] = {
+        "kv_hbm_budget_bytes": hbm_budget,
+        "workload": {"requests": n_requests, "prompt": prompt,
+                     "max_new": max_new, "max_len": max_len,
+                     "block_size": block_size},
+        "contiguous": {"slots": contig_slots, "peak_concurrent": peak_c,
+                       "tok_per_s": round(tput_c, 1),
+                       "hbm_bytes_per_request": hbm_per_req_c},
+        "paged": {"slots": paged_slots, "usable_pages": num_blocks - 1,
+                  "peak_concurrent": peak_p, "tok_per_s": round(tput_p, 1),
+                  "hbm_bytes_per_request": round(hbm_per_req_p),
+                  "preemptions": sp.preemptions,
+                  "prefill_chunks": sp.prefill_chunks_run},
+        "concurrency_ratio": round(peak_p / max(peak_c, 1), 2)}
+
+
+def write_bench_json():
+    with open(BENCH_JSON, "w") as f:
+        json.dump(RESULTS, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit("multitask/bench_json", 0.0, f"path={os.path.abspath(BENCH_JSON)}")
 
 
 def run(n_tasks=4, batch=8, prompt=32, steps=16):
@@ -143,8 +249,11 @@ def run(n_tasks=4, batch=8, prompt=32, steps=16):
 
     gb = A.table_bytes(cfg, n_tasks=n_tasks, bytes_per_el=2) / 1e9
     emit("multitask/fused_tables_gb", 0.0, f"gb={gb:.3f} tasks={n_tasks}")
+    RESULTS["fused_tables_gb"] = round(gb, 4)
 
     run_continuous_vs_static()
+    run_paged_equal_hbm()
+    write_bench_json()
 
 
 if __name__ == "__main__":

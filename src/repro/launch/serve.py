@@ -73,7 +73,18 @@ def main():
     ap.add_argument("--rate", type=float, default=0.5,
                     help="mean arrivals per decode step (Poisson stream)")
     ap.add_argument("--slots", type=int, default=4,
-                    help="KV-pool slots (continuous batch capacity)")
+                    help="KV-pool slots (continuous batch width)")
+    ap.add_argument("--layout", choices=("paged", "slots"), default="paged",
+                    help="KV pool layout: block-table pages (default) or "
+                         "one contiguous max-len region per slot")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV page size in tokens (--layout paged)")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="physical KV pages incl. the scratch page "
+                         "(0 = capacity parity with --layout slots)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="split prompts into chunks of this many tokens, "
+                         "one per decode gap (0 = whole-prompt prefill)")
     ap.add_argument("--prompt", type=int, default=16,
                     help="max prompt length (sampled 4..this)")
     ap.add_argument("--steps", type=int, default=8,
@@ -135,11 +146,20 @@ def main():
             on_token=on_token)
         arrivals.append((int(t), req))
 
-    sched = ContinuousScheduler(eng, SchedulerConfig(num_slots=args.slots))
+    sched = ContinuousScheduler(eng, SchedulerConfig(
+        num_slots=args.slots, kv_layout=args.layout,
+        block_size=args.block_size, num_blocks=args.num_blocks,
+        prefill_chunk=args.prefill_chunk))
     finished = sched.run_stream(arrivals)
     print(f"\nserved {len(finished)} requests in {sched.steps_decoded} mixed "
           f"decode steps ({sched.tokens_emitted} tokens, "
-          f"capacity {args.slots} slots)")
+          f"{args.slots} slots, layout={args.layout})")
+    if sched.paged:
+        pool = sched.pool
+        print(f"paged pool: {pool.num_blocks - 1} usable pages x "
+              f"{pool.block_size} tokens, peak concurrency "
+              f"{sched.peak_running}, {sched.prefill_chunks_run} prefill "
+              f"chunks, {sched.preemptions} preemptions")
     for rid in sorted(finished):
         req = finished[rid]
         ms = (req.t_done - req.t_submit) * 1e3

@@ -253,7 +253,7 @@ class Model:
     # blocks
     # ------------------------------------------------------------------
     def _attention(self, bp, h_in, positions, peft, peft_u, cache_u, decode_pos,
-                   prompt_len):
+                   prompt_len, block_tables=None):
         cfg, opts = self.cfg, self.opts
         dt = opts.compute_dtype
         method = peft["method"] if peft else "none"
@@ -273,7 +273,41 @@ class Model:
         softcap = cfg.logit_softcap
         new_cache = cache_u
 
-        if cache_u is not None and decode_pos is not None:
+        if cache_u is not None and decode_pos is not None and block_tables is not None:
+            # ---- paged decode: cache leaves are the global page pool
+            # (num_blocks, block_size, kvh, hd); each row's new KV lands in
+            # the page its block table maps for depth decode_pos ----
+            if window:
+                raise NotImplementedError(
+                    "paged decode has no sliding-window masking; serve SWA "
+                    "models with the contiguous slot layout")
+            bs_page = cache_u["k"].shape[1]
+            rows = jnp.arange(b)
+            page = block_tables[rows, decode_pos // bs_page]
+            off = decode_pos % bs_page
+            kc = cache_u["k"].at[page, off].set(k[:, 0].astype(cache_u["k"].dtype))
+            vc = cache_u["v"].at[page, off].set(v[:, 0].astype(cache_u["v"].dtype))
+            valid = decode_pos + 1
+            if opts.attn_impl == "pallas" and not softcap:
+                from repro.kernels import ops as kops
+                o = kops.paged_decode_attention(q[:, 0], kc, vc, block_tables,
+                                                valid)[:, None]
+            else:
+                o = L.paged_attention_decode(q, kc, vc, block_tables, valid,
+                                             softcap=softcap)
+            new_cache = {"k": kc, "v": vc}
+        elif cache_u is not None and decode_pos is not None and s > 1:
+            # ---- chunked-prefill extend: write a whole chunk of KV at
+            # offset decode_pos, attend causally over the cache so far ----
+            kc = jax.lax.dynamic_update_slice(
+                cache_u["k"], k.astype(cache_u["k"].dtype), (0, decode_pos, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache_u["v"], v.astype(cache_u["v"].dtype), (0, decode_pos, 0, 0))
+            o = L.attention_ref(q, kc, vc, causal=True, window=window,
+                                softcap=softcap, q_offset=decode_pos,
+                                kv_valid_len=decode_pos + s)
+            new_cache = {"k": kc, "v": vc}
+        elif cache_u is not None and decode_pos is not None:
             # ---- decode: write new kv, attend over cache ----
             S_c = cache_u["k"].shape[1]
             is_ring = (cfg.attn_kind == "swa" and opts.swa_ring_cache
@@ -370,7 +404,8 @@ class Model:
         return out, aux
 
     def _block_apply(self, kind, moe_flag, bp, h, *, ids, e_rows, positions,
-                     peft, peft_u, rng_layer, cache_u, decode_pos, prompt_len):
+                     peft, peft_u, rng_layer, cache_u, decode_pos, prompt_len,
+                     block_tables=None):
         """One block. Returns (h, aux, new_cache_u)."""
         cfg, opts = self.cfg, self.opts
         dt = opts.compute_dtype
@@ -388,14 +423,16 @@ class Model:
             from jax.ad_checkpoint import checkpoint_name
             if cfg.post_ln:
                 att, new_cache = self._attention(bp, h, positions, peft, peft_u,
-                                                 cache_u, decode_pos, prompt_len)
+                                                 cache_u, decode_pos, prompt_len,
+                                                 block_tables)
                 h = L.apply_norm(cfg, bp["ln1"], h + att)
                 ffn, aux = self._ffn(bp, h, peft, peft_u, moe_flag)
                 h = L.apply_norm(cfg, bp["ln2"], h + ffn)
             else:
                 att, new_cache = self._attention(bp, L.apply_norm(cfg, bp["ln1"], h),
                                                  positions, peft, peft_u,
-                                                 cache_u, decode_pos, prompt_len)
+                                                 cache_u, decode_pos, prompt_len,
+                                                 block_tables)
                 # SP-sharded, (b, s/TP, d)-sized: cheap to save so the remat
                 # policy can skip recomputing attention in the backward pass
                 att = checkpoint_name(att, "attn_mix")
@@ -444,7 +481,8 @@ class Model:
         return jax.checkpoint_policies.save_from_both_policies(*pols)
 
     def _group_apply(self, gparams, plan: GroupPlan, h, *, ids, e_rows,
-                     positions, peft, rng, gcache, decode_pos, prompt_len):
+                     positions, peft, rng, gcache, decode_pos, prompt_len,
+                     block_tables=None):
         opts = self.opts
         U = len(plan.kinds)
         peft_xs = self._peft_group_xs(peft, plan)          # (R, U, ...) or None
@@ -463,7 +501,8 @@ class Model:
                     kind, plan.moe_flags[u], bp, h, ids=ids, e_rows=e_rows,
                     positions=positions, peft=peft, peft_u=peft_u,
                     rng_layer=rng_layer, cache_u=cache_u,
-                    decode_pos=decode_pos, prompt_len=prompt_len)
+                    decode_pos=decode_pos, prompt_len=prompt_len,
+                    block_tables=block_tables)
                 auxs.append(aux)
                 new_caches.append(nc)
             aux_sum = {}
@@ -616,6 +655,30 @@ class Model:
                     st["m"] = jnp.full(st["m"].shape, -1e30, st["m"].dtype)
         return cache
 
+    def paged_cache_specs(self, num_blocks: int, block_size: int):
+        """ShapeDtypeStruct pytree for the paged KV pool: per attention unit
+        a global (R, num_blocks, block_size, kvh, hd) K/V page pool shared
+        by every request. Attention-only stacks (recurrent state has no
+        paged layout)."""
+        cfg = self.cfg
+        dt = self.opts.compute_dtype
+        out = []
+        for plan in self.plan:
+            g = {}
+            for u, kind in enumerate(plan.kinds):
+                assert kind == BLOCK_ATTN, (
+                    f"paged KV pool is attention-only, got {kind}")
+                sh = (plan.repeats, num_blocks, block_size,
+                      cfg.num_kv_heads, cfg.head_dim)
+                g[f"b{u}"] = {"k": jax.ShapeDtypeStruct(sh, dt),
+                              "v": jax.ShapeDtypeStruct(sh, dt)}
+            out.append(g)
+        return out
+
+    def init_paged_cache(self, num_blocks: int, block_size: int):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.paged_cache_specs(num_blocks, block_size))
+
     def _group_cache_view(self, cache, gi, plan):
         """Per-group cache dict keyed b0.. -> stacked (R, U is dict) for scan."""
         g = cache[gi]
@@ -653,12 +716,16 @@ class Model:
         return logits, new_cache, pos
 
     def decode_step(self, params, tokens, pos, cache, peft=None,
-                    rope_pos=None, extra: Optional[dict] = None):
+                    rope_pos=None, extra: Optional[dict] = None,
+                    block_tables=None):
         """One decode step. tokens: (b, 1); pos: scalar int32 — cache slot of
         the new token — or a per-row (b,) vector when every row sits at its
         own depth (continuous batching over a slotted KV pool). ``rope_pos``
         overrides the positional index when they differ, e.g. ptv2 prefixes
-        occupy cache slots but not rope positions.
+        occupy cache slots but not rope positions. ``block_tables`` (b,
+        npages) switches the attention caches to paged-pool layout
+        (``init_paged_cache``): each row's KV scatter and attention route
+        through its block-table slice; ``pos`` must then be per-row.
         Returns (logits (b,1,V), new_cache)."""
         cfg = self.cfg
         dt = self.opts.compute_dtype
@@ -687,10 +754,53 @@ class Model:
             h, _, gc = self._group_apply(
                 params["groups"][gi], plan, h, ids=ids, e_rows=e_rows,
                 positions=positions, peft=peft, rng=None, gcache=gcache,
-                decode_pos=pos, prompt_len=0)
+                decode_pos=pos, prompt_len=0, block_tables=block_tables)
             new_cache.append(_xs_to_unitdict(gc))
         h = L.apply_norm(cfg, params["final_norm"], h)
         return self.unembed(params, h), new_cache
+
+    def extend_step(self, params, tokens, start_pos, cache, peft=None,
+                    last_pos=None):
+        """Chunked-prefill extend: run a (b, c) chunk at positions
+        ``start_pos + [0, c)`` against an existing contiguous cache —
+        queries attend causally to every cache row < start_pos + their
+        offset, and the chunk's KV rows are written in place. Causal
+        attention-only stacks (the continuous scheduler's admission path).
+        Returns (logits (b, 1, V) at chunk-relative ``last_pos`` — default
+        the chunk's final row — and the new cache)."""
+        cfg = self.cfg
+        kinds = {k for plan in self.plan for k in plan.kinds}
+        assert kinds <= {BLOCK_ATTN}, (
+            f"chunked prefill needs attention-only stacks, got {kinds}")
+        assert cfg.causal and not cfg.prefix_lm_len, (
+            "chunked prefill relies on causal masking")
+        assert not (cfg.attn_kind == "swa" and self.opts.swa_ring_cache
+                    and cfg.sliding_window), (
+            "chunked prefill writes absolute cache positions; disable the "
+            "SWA ring cache to serve this model")
+        dt = self.opts.compute_dtype
+        ids = tokens
+        e_rows = jnp.take(params["embed"]["tok"], ids, axis=0)
+        h = e_rows.astype(dt)
+        if cfg.embed_scale:
+            h = h * jnp.asarray(math.sqrt(cfg.d_model), dt)
+        positions = start_pos + jnp.arange(tokens.shape[1])
+        if cfg.pos_type == "learned":
+            h = h + jnp.take(params["embed"]["pos"], positions, axis=0).astype(dt)[None]
+        new_cache = []
+        for gi, plan in enumerate(self.plan):
+            gcache = _unitdict_to_xs(cache[gi])
+            h, _, gc = self._group_apply(
+                params["groups"][gi], plan, h, ids=ids, e_rows=e_rows,
+                positions=positions, peft=peft, rng=None, gcache=gcache,
+                decode_pos=start_pos, prompt_len=0)
+            new_cache.append(_xs_to_unitdict(gc))
+        h = L.apply_norm(cfg, params["final_norm"], h)
+        if last_pos is None:
+            h_last = h[:, -1:]
+        else:
+            h_last = jax.lax.dynamic_slice_in_dim(h, last_pos, 1, axis=1)
+        return self.unembed(params, h_last), new_cache
 
 
 # ---------------------------------------------------------------------------

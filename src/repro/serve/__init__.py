@@ -1,4 +1,4 @@
 from repro.serve.engine import ServeEngine, ServeConfig  # noqa: F401
-from repro.serve.kv_pool import SlotKVPool  # noqa: F401
+from repro.serve.kv_pool import PagedKVPool, SlotKVPool  # noqa: F401
 from repro.serve.scheduler import (  # noqa: F401
     ContinuousScheduler, Request, SchedulerConfig)

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core import aot as aot_mod
 from repro.core import peft as peft_mod
+from repro.kernels.decode_attention import round_kv_len
 from repro.models.model import Model
 
 
@@ -58,9 +59,15 @@ class ServeEngine:
         else:
             self.peft = peft
             self.multitask = False
+        # KV allocations round up so the Pallas decode kernel never hits its
+        # pad-and-copy fallback (S % block_k != 0); rows past cfg.max_len
+        # stay masked by cur_len forever.
+        self.cache_len = round_kv_len(cfg.max_len)
         self._decode = jax.jit(self._decode_impl)
         self._prefill = jax.jit(self._prefill_impl)
         self._prefill_at = jax.jit(self._prefill_at_impl)
+        self._extend = jax.jit(self._extend_impl)
+        self._decode_paged = jax.jit(self._decode_paged_impl)
 
     # ------------------------------------------------------------------
     def _peft_for(self, task_ids):
@@ -75,17 +82,28 @@ class ServeEngine:
         if extra:
             batch.update(extra)
         peft = self._peft_for(task_ids)
-        return self.model.prefill(params, batch, peft, max_len=self.cfg.max_len)
+        return self.model.prefill(params, batch, peft, max_len=self.cache_len)
 
     def _prefill_at_impl(self, params, tokens, last_pos, task_ids):
         """Bucket prefill: logits taken at ``last_pos`` (last real token)."""
         peft = self._peft_for(task_ids)
         return self.model.prefill(params, {"tokens": tokens}, peft,
-                                  max_len=self.cfg.max_len, last_pos=last_pos)
+                                  max_len=self.cache_len, last_pos=last_pos)
 
     def _decode_impl(self, params, tokens, pos, cache, task_ids):
         peft = self._peft_for(task_ids)
         return self.model.decode_step(params, tokens, pos, cache, peft)
+
+    def _extend_impl(self, params, tokens, start, cache, last_pos, task_ids):
+        peft = self._peft_for(task_ids)
+        return self.model.extend_step(params, tokens, start, cache, peft,
+                                      last_pos=last_pos)
+
+    def _decode_paged_impl(self, params, tokens, pos, cache, task_ids,
+                           block_tables):
+        peft = self._peft_for(task_ids)
+        return self.model.decode_step(params, tokens, pos, cache, peft,
+                                      block_tables=block_tables)
 
     # ------------------------------------------------------------------
     # static-batch serving (the paper's benchmark setting)
@@ -134,6 +152,41 @@ class ServeEngine:
         logits, cache = self._decode(
             self.params, jnp.asarray(tokens), jnp.asarray(pos, np.int32),
             cache, jnp.asarray(task_ids, np.int32))
+        toks = np.asarray(jax.device_get(
+            jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)))
+        return toks, cache
+
+    def new_chunk_cache(self, alloc_len: int):
+        """Fresh batch=1 contiguous cache for a chunked prefill in flight."""
+        return self.model.init_cache(1, alloc_len)
+
+    def prefill_chunk(self, tokens: np.ndarray, start: int, cache,
+                      task_id: int, last_pos: int) -> Tuple[int, Any]:
+        """Run one prompt chunk against the request's in-flight cache.
+
+        tokens: (1, c) the chunk; ``start``: absolute position of its first
+        token; ``last_pos``: chunk-relative position whose logits to argmax
+        (the prompt's last real token on the final chunk; ignored-but-cheap
+        on earlier chunks). Returns (greedy token at last_pos, new cache)."""
+        tids = jnp.full((1,), task_id, jnp.int32)
+        logits, cache = self._extend(
+            self.params, jnp.asarray(tokens), jnp.asarray(start, jnp.int32),
+            cache, jnp.asarray(last_pos, jnp.int32), tids)
+        tok = int(jax.device_get(jnp.argmax(logits[0, -1])))
+        return tok, cache
+
+    def decode_paged(self, tokens: np.ndarray, pos: np.ndarray, cache,
+                     block_tables: np.ndarray, task_ids: np.ndarray):
+        """One mixed step over a paged KV pool.
+
+        tokens: (num_slots, 1); pos: (num_slots,) per-slot depths;
+        block_tables: (num_slots, npages) physical page ids (unmapped = 0,
+        the reserved scratch page); task_ids: (num_slots,). Returns
+        (next greedy token per slot, new pool cache)."""
+        logits, cache = self._decode_paged(
+            self.params, jnp.asarray(tokens), jnp.asarray(pos, np.int32),
+            cache, jnp.asarray(task_ids, np.int32),
+            jnp.asarray(block_tables, np.int32))
         toks = np.asarray(jax.device_get(
             jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)))
         return toks, cache

@@ -1,24 +1,36 @@
-"""Slotted KV pool: fixed-capacity decode caches for continuous batching.
+"""KV pools for continuous batching: contiguous slots and paged blocks.
 
-The pool owns one model cache pytree sized ``(num_slots, max_len)`` — every
-leaf keeps the slot (batch) axis at position 1, after the per-layer repeats
-axis — plus per-slot ``cur_len`` / ``task_id`` host arrays and a free list.
-Admitting a request allocates a slot and copies the request's prefilled
-cache into it in place (``dynamic_update_slice`` on a traced slot index, so
-batch composition changes never recompile); decode appends happen inside
-the engine's mixed step, which scatters each slot's new KV row at that
-slot's own depth.
+``SlotKVPool`` owns one model cache pytree sized ``(num_slots, max_len)`` —
+every leaf keeps the slot (batch) axis at position 1, after the per-layer
+repeats axis — plus per-slot ``cur_len`` / ``task_id`` host arrays and a
+free list. Admitting a request allocates a slot and copies the request's
+prefilled cache into it in place (``dynamic_update_slice`` on a traced slot
+index, so batch composition changes never recompile); decode appends happen
+inside the engine's mixed step, which scatters each slot's new KV row at
+that slot's own depth.
 
-Slot bookkeeping (alloc/free, lengths, task ids) is deliberately host-side
-numpy: it is O(num_slots) integers, mutated between device steps, and the
-decode step only consumes it as two small ``(num_slots,)`` vectors.
+``PagedKVPool`` replaces the one-contiguous-region-per-slot layout with a
+global pool of ``block_size``-token KV pages plus per-slot block tables:
+HBM is claimed page-by-page as requests actually deepen, so capacity is
+bounded by *tokens in flight*, not ``num_slots * max_len``. Page 0 is a
+reserved scratch page — free slots riding along in the mixed decode step
+scatter their garbage KV row there, and unmapped block-table entries point
+at it (they are only ever read past ``cur_len``, i.e. fully masked).
+
+Bookkeeping (alloc/free, lengths, task ids, block tables) is deliberately
+host-side numpy: it is O(num_slots + num_blocks) integers, mutated between
+device steps, and the decode step only consumes it as small int vectors.
 """
 from __future__ import annotations
 
-from typing import Any, List, Optional, Set
+from functools import partial
+from typing import Any, Dict, List, Optional, Set
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels.decode_attention import round_kv_len
 
 
 def _write_slot_impl(pool_cache, req_cache, slot):
@@ -54,7 +66,10 @@ class SlotKVPool:
         self.model = model
         self.num_slots = num_slots
         self.max_len = max_len
-        self.cache = model.init_cache(num_slots, max_len)
+        # rounded so the Pallas decode kernel never pads (rows past max_len
+        # stay masked by cur_len forever)
+        self.alloc_len = round_kv_len(max_len)
+        self.cache = model.init_cache(num_slots, self.alloc_len)
         self.cur_len = np.zeros(num_slots, np.int32)
         self.task_id = np.zeros(num_slots, np.int32)
         self._free: List[int] = list(range(num_slots - 1, -1, -1))
@@ -118,3 +133,194 @@ class SlotKVPool:
         assert not (free & self._used), "slot both free and used"
         assert free | self._used == set(range(self.num_slots)), "lost slot"
         assert all(self.cur_len[s] == 0 for s in free), "freed slot has length"
+
+
+# ---------------------------------------------------------------------------
+# paged pool
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnums=1)
+def _pad_seq(req_cache, pad):
+    def pd(c):     # (repeats, 1, S, kvh, hd) -> S + pad
+        return jnp.pad(c, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return jax.tree.map(pd, req_cache)
+
+
+def _write_pages_impl(pool_cache, req_cache, pages):
+    """Scatter a batch=1 prefill cache into physical pages ``pages`` of
+    every layer's pool in ONE functional update. ``pages`` is a traced
+    (npages,) page-id vector, so page-table churn never recompiles; one
+    compilation per (npages, prefill length) combination — both bucketed."""
+    def wr(p, c):
+        bs = p.shape[2]      # p: (repeats, num_blocks, bs, kvh, hd)
+        n = pages.shape[0]
+        chunks = c[:, 0, :n * bs].reshape((c.shape[0], n, bs) + c.shape[3:])
+        return p.at[:, pages].set(chunks.astype(p.dtype))
+    return jax.tree.map(wr, pool_cache, req_cache)
+
+
+_WRITE_PAGES = None
+
+
+def _write_pages(pool_cache, req_cache, pages):
+    global _WRITE_PAGES
+    if _WRITE_PAGES is None:
+        donate = (0,) if jax.default_backend() == "tpu" else ()
+        _WRITE_PAGES = jax.jit(_write_pages_impl, donate_argnums=donate)
+    return _WRITE_PAGES(pool_cache, req_cache, jnp.asarray(pages, jnp.int32))
+
+
+class PagedKVPool:
+    """Block-granular decode cache: a global page pool + per-slot block tables.
+
+    ``num_blocks`` counts physical pages *including* the reserved scratch
+    page 0, so usable capacity is ``(num_blocks - 1) * block_size`` tokens.
+    ``num_slots`` bounds the decode batch width (rows in the mixed step);
+    HBM is bounded by pages actually mapped, so num_slots can far exceed
+    what a contiguous pool could afford at the same budget.
+    """
+
+    def __init__(self, model, num_slots: int, max_len: int,
+                 block_size: int = 16, num_blocks: Optional[int] = None):
+        self.model = model
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.block_size = block_size
+        self.max_pages = -(-max_len // block_size)
+        if num_blocks is None:      # capacity parity with a contiguous pool
+            num_blocks = num_slots * self.max_pages + 1
+        assert num_blocks >= self.max_pages + 1, (
+            f"num_blocks {num_blocks} cannot hold even one max_len request "
+            f"({self.max_pages} pages + scratch)")
+        self.num_blocks = num_blocks
+        self.cache = model.init_paged_cache(num_blocks, block_size)
+        self.block_tables = np.zeros((num_slots, self.max_pages), np.int32)
+        self.cur_len = np.zeros(num_slots, np.int32)
+        self.task_id = np.zeros(num_slots, np.int32)
+        self._free_slots: List[int] = list(range(num_slots - 1, -1, -1))
+        self._used_slots: Set[int] = set()
+        # page 0 is scratch: free rows in the mixed step scatter there and
+        # unmapped table entries read it fully masked
+        self._free_blocks: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._pages: Dict[int, List[int]] = {}
+
+    # ------------------------------------------------------------------
+    # capacity queries
+    # ------------------------------------------------------------------
+    def has_free(self) -> bool:
+        return bool(self._free_slots)
+
+    def num_free(self) -> int:
+        return len(self._free_slots)
+
+    def free_blocks(self) -> int:
+        return len(self._free_blocks)
+
+    def blocks_in_use(self) -> int:
+        return self.num_blocks - 1 - len(self._free_blocks)
+
+    def pages_needed(self, tokens: int) -> int:
+        return -(-tokens // self.block_size)
+
+    def occupied(self) -> List[int]:
+        return sorted(self._used_slots)
+
+    def kv_bytes_per_token(self) -> int:
+        tot = 0
+        for leaf in jax.tree.leaves(self.cache):
+            tot += (leaf.size // (self.num_blocks * self.block_size)) * leaf.dtype.itemsize
+        return tot
+
+    # ------------------------------------------------------------------
+    # slot + page lifecycle
+    # ------------------------------------------------------------------
+    def alloc(self, task_id: int = 0, npages: int = 0) -> Optional[int]:
+        """Claim a slot plus ``npages`` pages (None if either is short)."""
+        assert npages <= self.max_pages, (
+            f"{npages} pages exceeds max_len ({self.max_pages} pages)")
+        if not self._free_slots or len(self._free_blocks) < npages:
+            return None
+        slot = self._free_slots.pop()
+        self._used_slots.add(slot)
+        self.task_id[slot] = task_id
+        self.cur_len[slot] = 0
+        pages = [self._free_blocks.pop() for _ in range(npages)]
+        self._pages[slot] = pages
+        self.block_tables[slot, :npages] = pages
+        return slot
+
+    def ensure_append_page(self, slot: int) -> bool:
+        """Map the page holding depth ``cur_len[slot]`` (the next decode
+        append). Returns False when the pool is out of pages — the caller
+        must preempt someone or stall."""
+        need = int(self.cur_len[slot]) // self.block_size
+        pages = self._pages[slot]
+        if need < len(pages):
+            return True
+        assert need == len(pages), "append skipped a page"
+        if not self._free_blocks:
+            return False
+        page = self._free_blocks.pop()
+        pages.append(page)
+        self.block_tables[slot, need] = page
+        return True
+
+    def free(self, slot: int) -> None:
+        if slot not in self._used_slots:
+            raise ValueError(f"slot {slot} is not allocated")
+        self._used_slots.remove(slot)
+        self._free_blocks.extend(reversed(self._pages.pop(slot)))
+        self.block_tables[slot] = 0
+        self.cur_len[slot] = 0
+        self.task_id[slot] = 0
+        self._free_slots.append(slot)
+
+    # ------------------------------------------------------------------
+    # cache writes
+    # ------------------------------------------------------------------
+    def write_prefill(self, slot: int, req_cache: Any, length: int) -> None:
+        """Scatter a request's prefilled contiguous cache into its mapped
+        pages. ``length`` is the number of real prompt tokens; the slot must
+        already hold ``pages_needed(length)`` pages (admission allocates
+        them)."""
+        if length > self.max_len:
+            raise ValueError(f"prompt length {length} exceeds pool max_len "
+                             f"{self.max_len}")
+        npages = self.pages_needed(length)
+        pages = self._pages[slot]
+        assert len(pages) >= npages, (
+            f"slot {slot}: {len(pages)} pages mapped, prefill needs {npages}")
+        S = jax.tree.leaves(req_cache)[0].shape[2]
+        need = npages * self.block_size
+        if S < need:    # tail page extends past the prefill bucket: pad once
+            req_cache = _pad_seq(req_cache, need - S)
+        self.cache = _write_pages(self.cache, req_cache, pages[:npages])
+        self.cur_len[slot] = length
+
+    def advance(self, slots) -> None:
+        """Record one decode append for each slot in ``slots``."""
+        for s in slots:
+            self.cur_len[s] += 1
+
+    # ------------------------------------------------------------------
+    def check_no_leaks(self) -> None:
+        """Invariant: slots and pages each partition exactly into free/used."""
+        free = set(self._free_slots)
+        assert len(self._free_slots) == len(free), "duplicate slots on free list"
+        assert not (free & self._used_slots), "slot both free and used"
+        assert free | self._used_slots == set(range(self.num_slots)), "lost slot"
+        assert all(self.cur_len[s] == 0 for s in free), "freed slot has length"
+        assert set(self._pages) == self._used_slots, "page map out of sync"
+        fb = set(self._free_blocks)
+        assert len(self._free_blocks) == len(fb), "duplicate pages on free list"
+        assert 0 not in fb, "scratch page leaked onto the free list"
+        used_pages: Set[int] = set()
+        for slot, pages in self._pages.items():
+            ps = set(pages)
+            assert len(pages) == len(ps), f"slot {slot} double-mapped a page"
+            assert not (ps & used_pages), "page mapped by two slots"
+            assert len(pages) >= self.pages_needed(int(self.cur_len[slot])), (
+                f"slot {slot} is deeper than its mapped pages")
+            used_pages |= ps
+        assert not (fb & used_pages), "page both free and mapped"
+        assert fb | used_pages == set(range(1, self.num_blocks)), "lost page"

@@ -3,10 +3,28 @@
 Static batching forces every request to arrive together, share one prompt
 length, and finish together. This scheduler serves realistic traffic: each
 request carries its own ``task_id``, prompt, and ``max_new_tokens``; new
-requests are admitted into free KV-pool slots *between* decode steps
-(bucket-padded prefill, one compilation per bucket), and every decode step
-is ONE jitted mixed pass over all occupied slots with per-slot positions
-and the multitask AoT gather routed by the slot task-id vector.
+requests are admitted *between* decode steps, and every decode step is ONE
+jitted mixed pass over all occupied slots with per-slot positions and the
+multitask AoT gather routed by the slot task-id vector.
+
+Two KV layouts share the same request lifecycle:
+
+  * ``kv_layout="paged"`` (default): a :class:`PagedKVPool` — KV pages are
+    claimed block-by-block as requests deepen, so HBM is bounded by tokens
+    in flight and ``num_slots`` can far exceed what ``num_slots * max_len``
+    contiguous regions would cost. Decode appends route through per-slot
+    block tables; when the pool runs out of pages mid-decode the newest
+    request is preempted (freed + requeued) and later *recomputed* —
+    greedy decode makes the recompute token-for-token identical.
+  * ``kv_layout="slots"``: the contiguous :class:`SlotKVPool` — one
+    ``max_len`` region per slot (kept for comparison benchmarks).
+
+Prefill is bucket-padded (one compilation per bucket). With
+``prefill_chunk > 0`` long prompts are additionally split into fixed-size
+chunks processed one per tick — decode steps run between chunks, so a long
+prompt no longer stalls every running request (head-of-line blocking);
+each tick is then a mixed unit of at most one prefill chunk plus one
+decode step over all running slots.
 
 Because the AoT bias is a per-(task, token) gather from the fused tables
 (paper Eq. 1), the mixed-task batch costs exactly what a single-task batch
@@ -16,20 +34,21 @@ across tasks free, not just across lengths.
 
 Greedy decode here is token-for-token identical to per-request static
 ``ServeEngine.generate``: bucket padding is inert under causal attention,
-per-slot decode writes/reads the same cache rows a dedicated cache would,
-and masked (invalid) rows never contribute (see tests/test_serve_scheduler).
+per-slot decode writes/reads the same cache rows a dedicated cache would
+(pages are just a scattered layout of those rows), and masked (invalid)
+rows never contribute (see tests/test_serve_scheduler).
 """
 from __future__ import annotations
 
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.serve.engine import ServeEngine
-from repro.serve.kv_pool import SlotKVPool
+from repro.serve.kv_pool import PagedKVPool, SlotKVPool
 
 QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
 
@@ -54,14 +73,34 @@ class Request:
 
 @dataclass(frozen=True)
 class SchedulerConfig:
-    num_slots: int = 8                  # batch capacity (KV pool slots)
+    num_slots: int = 8                  # batch width (mixed-step rows)
     bucket_min: int = 16                # smallest prefill bucket (doubles up)
     admit_per_step: int = 0             # max prefills between decode steps
                                         # (0 = fill every free slot)
+    kv_layout: str = "paged"            # "paged" | "slots"
+    block_size: int = 16                # KV page size in tokens (paged)
+    num_blocks: int = 0                 # physical pages incl. scratch page 0
+                                        # (0 = capacity parity with slots)
+    prefill_chunk: int = 0              # split prompts into chunks of this
+                                        # many tokens, one per tick (0 = off)
+
+
+@dataclass
+class _Prefill:
+    """A chunked prefill in flight: the request holds its slot (and pages)
+    while its prompt streams through chunk-by-chunk between decode steps."""
+    req: Request
+    slot: int
+    toks: np.ndarray                    # (1, bucket) padded tokens
+    length: int                         # real tokens (prompt [+ recompute])
+    chunk: int                          # chunk size for this prompt
+    done: int = 0                       # tokens processed so far
+    cache: Any = None                   # per-request temp contiguous cache
+    tok: int = -1                       # greedy token after the last chunk
 
 
 class ContinuousScheduler:
-    """Drives a ServeEngine + SlotKVPool over an online request stream."""
+    """Drives a ServeEngine + KV pool over an online request stream."""
 
     def __init__(self, engine: ServeEngine, cfg: SchedulerConfig = SchedulerConfig()):
         mcfg = engine.model.cfg
@@ -82,10 +121,21 @@ class ContinuousScheduler:
         assert method not in ("ptv1", "ptv2"), (
             f"{method}: prompt/prefix tuning changes cache layout per "
             "request; serve it with static batches")
+        assert cfg.kv_layout in ("paged", "slots"), cfg.kv_layout
+        assert not (cfg.kv_layout == "paged" and mcfg.attn_kind == "swa"
+                    and mcfg.sliding_window), (
+            f"{mcfg.name}: paged decode has no sliding-window masking yet; "
+            "serve SWA models with kv_layout='slots'")
         self.engine = engine
         self.cfg = cfg
         self.max_len = engine.cfg.max_len
-        self.pool = SlotKVPool(engine.model, cfg.num_slots, self.max_len)
+        if cfg.kv_layout == "paged":
+            self.pool = PagedKVPool(
+                engine.model, cfg.num_slots, self.max_len,
+                block_size=cfg.block_size,
+                num_blocks=cfg.num_blocks or None)
+        else:
+            self.pool = SlotKVPool(engine.model, cfg.num_slots, self.max_len)
         self.queue: deque = deque()
         self.running: Dict[int, Request] = {}        # slot -> request
         self.finished: Dict[int, Request] = {}       # rid -> request
@@ -93,6 +143,16 @@ class ContinuousScheduler:
         self.clock = 0                               # decode-step counter
         self.steps_decoded = 0
         self.tokens_emitted = 0
+        self.preemptions = 0
+        self.prefill_chunks_run = 0
+        self.peak_running = 0
+        self._prefilling: Optional[_Prefill] = None
+        self._admit_seq: Dict[int, int] = {}         # slot -> admission order
+        self._seq = 0
+
+    @property
+    def paged(self) -> bool:
+        return isinstance(self.pool, PagedKVPool)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -137,37 +197,170 @@ class ContinuousScheduler:
         req.t_done = time.perf_counter()
         self.finished[req.rid] = req
 
-    def _admit_one(self) -> None:
-        req: Request = self.queue.popleft()
-        slot = self.pool.alloc(req.task_id)
+    # ------------------------------------------------------------------
+    # admission (bucketed prefill; optionally chunked across ticks)
+    # ------------------------------------------------------------------
+    def _prefill_tokens(self, req: Request) -> np.ndarray:
+        """The token sequence whose KV must be resident before decode.
+
+        A fresh request prefills its prompt. A preempted request recomputes
+        prompt + all-but-the-last generated token (the last one is the
+        pending decode input, not yet in any cache)."""
+        if req.out:
+            return np.concatenate([req.prompt,
+                                   np.asarray(req.out[:-1], np.int32)])
+        return req.prompt
+
+    def _alloc_slot(self, req: Request, length: int) -> Optional[int]:
+        if self.paged:
+            return self.pool.alloc(req.task_id, self.pool.pages_needed(length))
+        return self.pool.alloc(req.task_id)
+
+    def _can_admit(self, req: Request) -> bool:
+        if not self.pool.has_free():
+            return False
+        if self.paged:
+            need = self.pool.pages_needed(len(self._prefill_tokens(req)))
+            return self.pool.free_blocks() >= need
+        return True
+
+    def _install(self, req: Request, slot: int, cache, length: int,
+                 prefill_tok: int) -> None:
+        """Write the prefilled cache into the pool and start decoding."""
+        self.pool.write_prefill(slot, cache, length)
+        req.state, req.slot = RUNNING, slot
+        self._seq += 1
+        self._admit_seq[slot] = self._seq
+        self.running[slot] = req
+        if req.out:
+            # recompute after preemption: the pending input token was already
+            # emitted; greedy determinism guarantees prefill_tok == out[-1]
+            self.slot_tokens[slot, 0] = req.out[-1]
+        else:
+            self.slot_tokens[slot, 0] = prefill_tok
+            if self._emit(req, prefill_tok):
+                self._finish(req)
+
+    def _admit_whole(self, req: Request) -> None:
+        """Old path: the entire (bucket-padded) prompt in one prefill call."""
+        toks_full = self._prefill_tokens(req)
+        s = len(toks_full)
+        slot = self._alloc_slot(req, s)
         assert slot is not None
-        s = len(req.prompt)
         bucket = self._bucket(s)
         toks = np.zeros((1, bucket), np.int32)
-        toks[0, :s] = req.prompt
+        toks[0, :s] = toks_full
         tok, cache = self.engine.prefill_request(toks, s, req.task_id)
-        self.pool.write_prefill(slot, cache, s)
-        req.state, req.slot = RUNNING, slot
-        self.running[slot] = req
-        self.slot_tokens[slot, 0] = tok
-        if self._emit(req, tok):
-            self._finish(req)
+        self._install(req, slot, cache, s, tok)
+
+    def _start_chunked(self, req: Request) -> None:
+        toks_full = self._prefill_tokens(req)
+        s = len(toks_full)
+        slot = self._alloc_slot(req, s)
+        assert slot is not None
+        bucket = self._bucket(s)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :s] = toks_full
+        chunk = min(self.cfg.prefill_chunk, bucket)
+        if self.paged:
+            bs = self.pool.block_size
+            alloc = -(-max(bucket, bs) // bs) * bs
+        else:
+            alloc = bucket
+        self._prefilling = _Prefill(
+            req=req, slot=slot, toks=toks, length=s, chunk=chunk,
+            cache=self.engine.new_chunk_cache(alloc))
+
+    def _advance_chunk(self) -> None:
+        """Run one prompt chunk of the in-flight prefill; install when the
+        chunk containing the last real token completes."""
+        pf = self._prefilling
+        lo = pf.done
+        hi = min(lo + pf.chunk, pf.toks.shape[1])
+        last = pf.length - 1
+        last_pos = (last - lo) if lo <= last < hi else (hi - lo - 1)
+        tok, pf.cache = self.engine.prefill_chunk(
+            pf.toks[:, lo:hi], lo, pf.cache, pf.req.task_id, last_pos)
+        pf.done = hi
+        self.prefill_chunks_run += 1
+        if hi > last:       # final chunk reached the prompt's last real token
+            self._prefilling = None
+            self._install(pf.req, pf.slot, pf.cache, pf.length, tok)
+
+    def _admission_tick(self) -> None:
+        if self.cfg.prefill_chunk > 0:
+            # at most one chunk of prefill work per tick: decode steps run
+            # between chunks, so long prompts never stall running requests
+            if self._prefilling is None and self.queue \
+                    and self._can_admit(self.queue[0]):
+                self._start_chunked(self.queue.popleft())
+            if self._prefilling is not None:
+                self._advance_chunk()
+            return
+        lim = self.cfg.admit_per_step or self.cfg.num_slots
+        admitted = 0
+        while (self.queue and admitted < lim
+               and self._can_admit(self.queue[0])):
+            self._admit_whole(self.queue.popleft())
+            admitted += 1
+
+    # ------------------------------------------------------------------
+    # page backpressure (paged layout only)
+    # ------------------------------------------------------------------
+    def _preempt(self, slot: int) -> None:
+        """Free a running request's slot and pages; requeue it at the front
+        for recompute (greedy decode makes the recompute exact)."""
+        req = self.running.pop(slot)
+        self._admit_seq.pop(slot, None)
+        self.pool.free(slot)
+        req.state, req.slot = QUEUED, -1
+        self.queue.appendleft(req)
+        self.preemptions += 1
+
+    def _abort_prefill(self) -> None:
+        pf = self._prefilling
+        self._prefilling = None
+        self.pool.free(pf.slot)
+        pf.req.state, pf.req.slot = QUEUED, -1
+        self.queue.appendleft(pf.req)
+        self.preemptions += 1
+
+    def _ensure_pages(self) -> None:
+        """Every running row appends one KV row this step; map each row's
+        next page, preempting newest-admitted requests when the pool runs
+        dry (oldest requests keep their pages and make progress)."""
+        for slot in sorted(self.running, key=lambda s: self._admit_seq[s]):
+            if slot not in self.running:
+                continue
+            while not self.pool.ensure_append_page(slot):
+                victims = [s for s in self.running if s != slot]
+                if victims:
+                    self._preempt(max(victims, key=lambda s: self._admit_seq[s]))
+                elif self._prefilling is not None:
+                    self._abort_prefill()
+                else:
+                    raise RuntimeError(
+                        "paged KV pool cannot hold a single request; raise "
+                        "num_blocks (needs >= max_len/block_size + 1)")
 
     # ------------------------------------------------------------------
     def step(self) -> None:
-        """Admit new requests into free slots, then run one mixed decode
-        step over every occupied slot."""
-        lim = self.cfg.admit_per_step or self.cfg.num_slots
-        admitted = 0
-        while self.queue and self.pool.has_free() and admitted < lim:
-            self._admit_one()
-            admitted += 1
+        """Admit/advance prefill work, then run one mixed decode step over
+        every occupied slot."""
+        self._admission_tick()
         if self.running:
-            toks, cache = self.engine.decode_mixed(
-                self.slot_tokens, self.pool.cur_len, self.pool.cache,
-                self.pool.task_id)
+            if self.paged:
+                self._ensure_pages()
+                toks, cache = self.engine.decode_paged(
+                    self.slot_tokens, self.pool.cur_len, self.pool.cache,
+                    self.pool.block_tables, self.pool.task_id)
+            else:
+                toks, cache = self.engine.decode_mixed(
+                    self.slot_tokens, self.pool.cur_len, self.pool.cache,
+                    self.pool.task_id)
             self.pool.cache = cache
             active = list(self.running.items())
+            self.peak_running = max(self.peak_running, len(active))
             self.pool.advance([s for s, _ in active])
             self.steps_decoded += 1
             for slot, req in active:
@@ -179,7 +372,7 @@ class ContinuousScheduler:
 
     def run(self) -> Dict[int, Request]:
         """Drain everything currently submitted."""
-        while self.queue or self.running:
+        while self.queue or self.running or self._prefilling is not None:
             self.step()
         return self.finished
 
@@ -189,8 +382,10 @@ class ContinuousScheduler:
         running batch as their arrival step passes; idle gaps fast-forward."""
         order = sorted(range(len(arrivals)), key=lambda i: arrivals[i][0])
         i = 0
-        while i < len(order) or self.queue or self.running:
-            if (not self.queue and not self.running and i < len(order)
+        while (i < len(order) or self.queue or self.running
+               or self._prefilling is not None):
+            if (not self.queue and not self.running
+                    and self._prefilling is None and i < len(order)
                     and arrivals[order[i]][0] > self.clock):
                 self.clock = arrivals[order[i]][0]       # idle: fast-forward
             while i < len(order) and arrivals[order[i]][0] <= self.clock:

@@ -11,7 +11,7 @@ import pytest
 
 from repro.core import aot as A
 from repro.serve.engine import ServeConfig, ServeEngine
-from repro.serve.kv_pool import SlotKVPool
+from repro.serve.kv_pool import PagedKVPool, SlotKVPool
 from repro.serve.scheduler import (ContinuousScheduler, Request,
                                    SchedulerConfig)
 
@@ -25,12 +25,23 @@ def mt_engine(tiny_lm):
                             fused_tasks=tasks)
 
 
-def test_continuous_matches_static(rng, mt_engine):
+SCHED_VARIANTS = {
+    "slots": dict(kv_layout="slots"),
+    "paged": dict(kv_layout="paged", block_size=8),
+    "paged_chunked": dict(kv_layout="paged", block_size=8, prefill_chunk=8),
+}
+
+
+@pytest.mark.parametrize("variant", sorted(SCHED_VARIANTS))
+def test_continuous_matches_static(rng, mt_engine, variant):
     """Mixed-task stream through the continuous scheduler == per-request
-    static greedy decode, token for token. Staggered arrivals, ragged
-    prompt lengths, ragged output lengths, fewer slots than requests."""
+    static greedy decode, token for token — for the contiguous slotted
+    pool, the paged pool, and the paged pool with chunked prefill.
+    Staggered arrivals, ragged prompt lengths, ragged output lengths,
+    fewer slots than requests."""
     cfg, eng = mt_engine
-    sched = ContinuousScheduler(eng, SchedulerConfig(num_slots=3, bucket_min=8))
+    sched = ContinuousScheduler(eng, SchedulerConfig(
+        num_slots=3, bucket_min=8, **SCHED_VARIANTS[variant]))
     reqs, arrivals = [], []
     for i in range(8):
         plen = int(rng.integers(3, 17))
@@ -48,7 +59,57 @@ def test_continuous_matches_static(rng, mt_engine):
                            np.asarray([req.task_id], np.int32))[0]
         np.testing.assert_array_equal(
             np.asarray(finished[req.rid].out), ref,
-            err_msg=f"req {req.rid} (task {req.task_id}) diverged")
+            err_msg=f"req {req.rid} (task {req.task_id}) diverged ({variant})")
+
+
+def test_paged_preemption_recompute_exact(rng, mt_engine):
+    """A pool too small for the offered load preempts (newest victim,
+    recompute on re-admission) and still matches static decode exactly."""
+    cfg, eng = mt_engine
+    # 48-token max_len -> 6 pages of 8; 11 usable pages forces churn
+    sched = ContinuousScheduler(eng, SchedulerConfig(
+        num_slots=4, bucket_min=8, kv_layout="paged", block_size=8,
+        num_blocks=12))
+    reqs = []
+    for i in range(8):
+        plen = int(rng.integers(3, 17))
+        req = Request(rid=i,
+                      prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+                      task_id=int(rng.integers(0, 3)),
+                      max_new_tokens=int(rng.integers(4, 12)))
+        reqs.append(req)
+        sched.submit(req)
+    finished = sched.run()
+    sched.pool.check_no_leaks()
+    assert sched.preemptions > 0, "pool was sized to force preemption"
+    assert len(finished) == len(reqs)
+    for req in reqs:
+        ref = eng.generate(req.prompt[None], req.max_new_tokens,
+                           np.asarray([req.task_id], np.int32))[0]
+        np.testing.assert_array_equal(
+            np.asarray(finished[req.rid].out), ref,
+            err_msg=f"req {req.rid} diverged after preemption churn")
+
+
+def test_paged_admission_backpressure(rng, mt_engine):
+    """Out-of-blocks admission: queued requests wait for pages instead of
+    overdrawing the pool, and everything still drains."""
+    cfg, eng = mt_engine
+    sched = ContinuousScheduler(eng, SchedulerConfig(
+        num_slots=6, bucket_min=8, kv_layout="paged", block_size=8,
+        num_blocks=8))      # 7 usable pages << 6 slots x 3 pages
+    for i in range(6):
+        sched.submit(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab_size, 16).astype(np.int32),
+            task_id=i % 3, max_new_tokens=4))
+    # first step can admit at most 3 requests (2 pages each, 7 free)
+    sched.step()
+    assert len(sched.running) <= 3
+    assert sched.pool.free_blocks() <= 1
+    assert len(sched.queue) >= 3, "admission must wait for pages"
+    finished = sched.run()
+    sched.pool.check_no_leaks()
+    assert len(finished) == 6 and sched.pool.free_blocks() == 7
 
 
 def test_streaming_and_latency_bookkeeping(rng, mt_engine):
@@ -97,6 +158,62 @@ def test_slot_pool_churn(rng, tiny_lm):
     assert pool.num_free() == 4
     with pytest.raises(ValueError):
         pool.free(0)
+
+
+def test_paged_pool_churn(rng, tiny_lm):
+    """Block allocator edge cases: out-of-blocks alloc returns None
+    (admission backpressure), freed pages are reused, and slot/page
+    bookkeeping never leaks or double-maps under churn."""
+    cfg, model, params = tiny_lm
+    pool = PagedKVPool(model, num_slots=4, max_len=32, block_size=8,
+                       num_blocks=9)            # 8 usable pages
+    assert pool.free_blocks() == 8 and pool.max_pages == 4
+    live = []
+    ever_freed, reused = set(), False
+    for i in range(400):
+        if live and (len(live) == 4 or rng.random() < 0.45):
+            slot = live.pop(int(rng.integers(0, len(live))))
+            ever_freed.update(pool._pages[slot])
+            pool.free(slot)
+        else:
+            npages = int(rng.integers(1, 4))
+            slot = pool.alloc(task_id=int(rng.integers(0, 3)), npages=npages)
+            if slot is None:      # backpressure: slots or pages exhausted
+                assert (not pool.has_free()
+                        or pool.free_blocks() < npages)
+                continue
+            assert slot not in live
+            reused |= bool(set(pool._pages[slot]) & ever_freed)
+            pool.cur_len[slot] = int(rng.integers(1, npages * 8 + 1))
+            # grow into fresh pages as decode would
+            while (rng.random() < 0.3
+                   and pool.cur_len[slot] < 32
+                   and pool.ensure_append_page(slot)):
+                pool.cur_len[slot] = (pool.cur_len[slot] // 8 + 1) * 8
+            live.append(slot)
+        pool.check_no_leaks()
+    assert reused, "churn never recycled a freed page"
+    # hard out-of-blocks: drain everything, then exhaust the pool exactly
+    for s in list(live):
+        pool.free(s)
+    pool.check_no_leaks()
+    assert pool.free_blocks() == 8
+    s1 = pool.alloc(npages=3)
+    s2 = pool.alloc(npages=4)
+    s3 = pool.alloc(npages=1)
+    assert None not in (s1, s2, s3) and pool.free_blocks() == 0
+    assert pool.alloc(npages=1) is None, "overdrawing the pool must fail"
+    pool.cur_len[s1] = 24       # next append needs a 4th page: none left
+    assert not pool.ensure_append_page(s1)
+    pool.free(s3)               # decode backpressure clears as pages free up
+    assert pool.ensure_append_page(s1) and pool.free_blocks() == 0
+    pool.cur_len[s1] = 0
+    pool.free(s1)
+    assert pool.alloc(npages=4) is not None, "freed pages must be reusable"
+    pool.check_no_leaks()
+    unallocated = (set(range(4)) - pool._used_slots).pop()
+    with pytest.raises(ValueError):
+        pool.free(unallocated)
 
 
 def test_scheduler_drains_under_churn(rng, mt_engine):
@@ -148,5 +265,48 @@ def test_mixed_step_pallas_decode_parity(rng, tiny_lm):
     step_tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, 1)), jnp.int32)
     lg_ref, _ = model.decode_step(params, step_tok, pos, cache)
     lg_pal, _ = pmodel.decode_step(params, step_tok, pos, cache)
+    np.testing.assert_allclose(np.asarray(lg_ref), np.asarray(lg_pal),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_mixed_step_decode_parity(rng, tiny_lm):
+    """A paged cache built from a contiguous prefill (rows scattered into
+    scrambled pages) decodes identically to the contiguous mixed step —
+    through both the XLA gather path and the Pallas paged kernel."""
+    from repro.models.model import Model, ModelOptions
+    cfg, model, params = tiny_lm
+    pmodel = Model(cfg, ModelOptions(chunk_q=8, chunk_kv=8, attn_impl="pallas"))
+    b, s, bs_page, nblocks = 3, 8, 4, 14
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    _, cache, _ = model.prefill(params, {"tokens": toks}, max_len=16)
+    depths = np.asarray([8, 5, 2], np.int32)
+    npages = 16 // bs_page
+    bt = np.zeros((b, npages), np.int32)
+    avail = list(rng.permutation(np.arange(1, nblocks)))
+    paged = model.init_paged_cache(nblocks, bs_page)
+    for i in range(b):
+        for j in range(-(-int(depths[i]) // bs_page)):
+            bt[i, j] = avail.pop()
+    for gi in range(len(paged)):
+        for u in paged[gi]:
+            for nm in ("k", "v"):
+                pool = np.array(paged[gi][u][nm])
+                src = np.asarray(cache[gi][u][nm])
+                for i in range(b):
+                    for j in range(-(-int(depths[i]) // bs_page)):
+                        lo = j * bs_page
+                        hi = min(lo + bs_page, int(depths[i]))
+                        pool[:, bt[i, j], :hi - lo] = src[:, i, lo:hi]
+                paged[gi][u][nm] = jnp.asarray(pool)
+    step_tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, 1)), jnp.int32)
+    pos = jnp.asarray(depths)
+    btj = jnp.asarray(bt)
+    lg_ref, _ = model.decode_step(params, step_tok, pos, cache)
+    lg_paged, _ = model.decode_step(params, step_tok, pos, paged,
+                                    block_tables=btj)
+    lg_pal, _ = pmodel.decode_step(params, step_tok, pos, paged,
+                                   block_tables=btj)
+    np.testing.assert_allclose(np.asarray(lg_ref), np.asarray(lg_paged),
+                               atol=2e-5, rtol=2e-5)
     np.testing.assert_allclose(np.asarray(lg_ref), np.asarray(lg_pal),
                                atol=2e-5, rtol=2e-5)
