@@ -11,7 +11,12 @@ Four comparisons:
       offered load and task counts;
   (d) paged vs contiguous KV at an EQUAL HBM budget — concurrent requests
       in flight and HBM bytes per request for a short-prompt/long-max_len
-      workload (where contiguous slots waste almost the whole region).
+      workload (where contiguous slots waste almost the whole region);
+  (e) stochastic sampling overhead — the same workload decoded greedy vs
+      temperature/top-p sampled (the fused sample-in-decode-step path);
+  (f) n=4 parallel samples via COW page forking vs n=4 independent
+      decodes — peak KV pages (prompt pages shared, only divergent decode
+      tails cost HBM).
 
 Also reports the fused-table residency cost (paper §3.3 RAM trade-off),
 and writes every serving number to ``BENCH_serve.json`` at the repo root
@@ -29,6 +34,7 @@ from benchmarks.common import bench_model, emit, random_aot_fused, time_fn
 from repro.core import aot as A
 from repro.kernels.decode_attention import round_kv_len
 from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import ContinuousScheduler, Request, SchedulerConfig
 
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
@@ -208,6 +214,85 @@ def run_paged_equal_hbm(n_tasks=2, contig_slots=2, max_len=256, prompt=8,
         "concurrency_ratio": round(peak_p / max(peak_c, 1), 2)}
 
 
+def run_sampling_and_forking(n_tasks=2, slots=6, n_requests=12, prompt=16,
+                             max_new=(4, 16), block_size=16, temp=0.8,
+                             top_p=0.9, fork_prompt=100, fork_new=8,
+                             fork_n=4):
+    """(e) sampled-vs-greedy decode throughput and (f) the COW forking
+    HBM claim: n parallel samples share the prompt's KV pages, so the
+    forked run's peak pages stay well under n independent decodes (the
+    acceptance bar is < 1.5x a single-sample run for n=4)."""
+    cfg, model, params = bench_model(d_model=128, layers=4, vocab=512, heads=4,
+                                     kv=2)
+    rng = np.random.default_rng(0)
+    tasks = [random_aot_fused(cfg, params, seed=t) for t in range(n_tasks)]
+    max_len = max(prompt + max_new[1] + 4, fork_prompt + fork_new + 4)
+    eng = ServeEngine(model, params, ServeConfig(max_len=max_len),
+                      fused_tasks=tasks)
+
+    # ---- (e) same workload, greedy vs stochastic decode ----
+    def serve(sampler):
+        rr = np.random.default_rng(1)
+        reqs = [Request(
+            rid=i,
+            prompt=rr.integers(0, cfg.vocab_size, prompt).astype(np.int32),
+            task_id=int(rr.integers(0, n_tasks)),
+            max_new_tokens=int(rr.integers(*max_new)),
+            sampling=sampler(i)) for i in range(n_requests)]
+        sched = ContinuousScheduler(eng, SchedulerConfig(
+            num_slots=slots, block_size=block_size))
+        for r in reqs:
+            sched.submit(r)
+        t0 = time.perf_counter()
+        sched.run()
+        return sched.tokens_emitted / (time.perf_counter() - t0)
+
+    greedy = lambda i: None
+    stoch = lambda i: SamplingParams(temperature=temp, top_p=top_p, seed=i)
+    serve(greedy), serve(stoch)             # warm both decode compilations
+    tput_g, tput_s = serve(greedy), serve(stoch)
+    emit("multitask/decode_greedy", 0.0, f"tok_per_s={tput_g:.0f}")
+    emit("multitask/decode_sampled", 0.0,
+         f"tok_per_s={tput_s:.0f} temp={temp} top_p={top_p}")
+    RESULTS["sampling"] = {
+        "workload": {"requests": n_requests, "prompt": prompt,
+                     "max_new": list(max_new), "slots": slots},
+        "greedy_tok_per_s": round(tput_g, 1),
+        "sampled_tok_per_s": round(tput_s, 1),
+        "sampled_over_greedy": round(tput_s / max(tput_g, 1e-9), 3)}
+
+    # ---- (f) n parallel samples: COW fork vs independent decodes ----
+    fprompt = rng.integers(0, cfg.vocab_size, fork_prompt).astype(np.int32)
+
+    def peak_pages(n, slots_n):
+        req = Request(rid=0, prompt=fprompt, task_id=0,
+                      max_new_tokens=fork_new,
+                      sampling=SamplingParams(temperature=temp, top_p=top_p,
+                                              seed=7, n=n))
+        sched = ContinuousScheduler(eng, SchedulerConfig(
+            num_slots=slots_n, block_size=block_size))
+        sched.submit(req)
+        _, pages = _drain_tracking_peak(sched)
+        return pages, sched.pool.forks, sched.pool.cow_copies
+
+    pages_1, _, _ = peak_pages(1, slots)
+    pages_n, forks, cows = peak_pages(fork_n, slots)
+    pages_indep, _, _ = peak_pages(fork_n, 1)   # 1 slot: forks impossible
+    ratio = pages_n / max(pages_1, 1)
+    emit("multitask/fork_cow_pages", 0.0,
+         f"n={fork_n} forked={pages_n} single={pages_1} "
+         f"independent_serial={pages_indep} ratio={ratio:.2f}x "
+         f"forks={forks} cow_copies={cows}")
+    RESULTS["fork_cow"] = {
+        "n": fork_n, "prompt": fork_prompt, "max_new": fork_new,
+        "block_size": block_size,
+        "peak_pages_single": pages_1,
+        "peak_pages_forked": pages_n,
+        "peak_pages_independent_serial": pages_indep,
+        "forks": forks, "cow_copies": cows,
+        "forked_over_single": round(ratio, 3)}
+
+
 def write_bench_json():
     with open(BENCH_JSON, "w") as f:
         json.dump(RESULTS, f, indent=2, sort_keys=True)
@@ -253,7 +338,13 @@ def run(n_tasks=4, batch=8, prompt=32, steps=16):
 
     run_continuous_vs_static()
     run_paged_equal_hbm()
+    run_sampling_and_forking()
     write_bench_json()
+    # asserted AFTER the write so a regression still records the evidence
+    ratio = RESULTS["fork_cow"]["forked_over_single"]
+    assert ratio < 1.5, (
+        f"n={RESULTS['fork_cow']['n']} forked sampling used {ratio:.2f}x "
+        "the pages of a single-sample run (acceptance bar: < 1.5x)")
 
 
 if __name__ == "__main__":

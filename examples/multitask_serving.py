@@ -20,6 +20,7 @@ from repro.data.pipeline import LMStream
 from repro.data.tasks import ClassificationTask
 from repro.models.model import Model, ModelOptions
 from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import ContinuousScheduler, Request, SchedulerConfig
 from repro.train.step import TrainConfig, make_train_step, split_train
 
@@ -119,6 +120,24 @@ def main():
                            np.asarray([req.task_id], np.int32))[0]
         tag = "ok" if np.array_equal(np.asarray(req.out), ref) else "MISMATCH"
         print(f"  req {rid} task={req.task_id}: {req.out} [{tag} vs dedicated]")
+
+    # stochastic sampling with COW-forked parallel samples: one prompt,
+    # n=3 temperature/top-p continuations from ONE prefill — the forked
+    # samples share the prompt's KV pages and only pay for divergent tails
+    sched = ContinuousScheduler(eng, SchedulerConfig(num_slots=4, bucket_min=8,
+                                                     block_size=8))
+    req = Request(rid=0,
+                  prompt=rng.integers(0, cfg.vocab_size, 12).astype(np.int32),
+                  task_id=0, max_new_tokens=6,
+                  sampling=SamplingParams(temperature=0.8, top_p=0.9, seed=17,
+                                          n=3))
+    sched.submit(req)
+    sched.run()
+    pool = sched.pool
+    print(f"sampled n=3 (temp 0.8, top-p 0.9): {pool.forks} forks, "
+          f"{pool.cow_copies} COW copies, {pool.blocks_in_use()} pages at end")
+    for i, s in enumerate(req.samples):
+        print(f"  sample {i}: {s}")
 
 
 if __name__ == "__main__":

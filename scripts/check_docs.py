@@ -1,0 +1,63 @@
+#!/usr/bin/env python
+"""Docs link checker: fail CI when README.md / docs/*.md reference files
+that don't exist.
+
+Checks every relative markdown link and image (``[text](target)``) in
+``README.md`` and ``docs/*.md``. External links (http/https/mailto) are
+skipped — CI shouldn't flake on the network; pure in-page anchors
+(``#section``) are skipped too. A relative target must exist on disk,
+resolved against the file that references it; an optional ``#anchor``
+suffix is ignored for existence checking.
+
+    python scripts/check_docs.py            # from the repo root
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+SKIP = ("http://", "https://", "mailto:")
+
+
+def doc_files(root: Path):
+    files = []
+    readme = root / "README.md"
+    if readme.exists():
+        files.append(readme)
+    files.extend(sorted((root / "docs").glob("*.md")))
+    return files
+
+
+def check(root: Path) -> int:
+    bad = []
+    checked = 0
+    for md in doc_files(root):
+        text = md.read_text(encoding="utf-8")
+        # blank out fenced code blocks (``` examples often contain pseudo
+        # paths) while keeping their newlines so line numbers stay true
+        text = re.sub(r"```.*?```",
+                      lambda m: "\n" * m.group(0).count("\n"),
+                      text, flags=re.S)
+        for m in LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(SKIP) or target.startswith("#"):
+                continue
+            checked += 1
+            path = target.split("#", 1)[0]
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                line = text[:m.start()].count("\n") + 1
+                bad.append(f"{md.relative_to(root)}:{line}: dead link "
+                           f"-> {target}")
+    for msg in bad:
+        print(msg, file=sys.stderr)
+    print(f"checked {checked} relative links across "
+          f"{len(doc_files(root))} files: "
+          f"{'FAIL' if bad else 'ok'}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(Path(__file__).resolve().parent.parent))

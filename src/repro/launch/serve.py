@@ -18,6 +18,7 @@ all-arrive-together behavior for comparison.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import numpy as np
@@ -26,6 +27,7 @@ from repro import configs
 from repro.core import aot as aot_mod
 from repro.models.model import Model, ModelOptions
 from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import ContinuousScheduler, Request, SchedulerConfig
 
 
@@ -85,6 +87,19 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="split prompts into chunks of this many tokens, "
                          "one per decode gap (0 = whole-prompt prefill)")
+    samp = ap.add_argument_group("sampling (default: greedy)")
+    samp.add_argument("--temperature", type=float, default=0.0,
+                      help="0 = greedy argmax; > 0 samples from the scaled "
+                           "distribution with per-request seeded streams")
+    samp.add_argument("--top-k", type=int, default=0,
+                      help="keep only the k highest logits (0 = off)")
+    samp.add_argument("--top-p", type=float, default=1.0,
+                      help="nucleus sampling mass (1.0 = off)")
+    samp.add_argument("--samples", type=int, default=1,
+                      help="parallel samples per request (n > 1 shares the "
+                           "prefill KV pages copy-on-write; --layout paged)")
+    samp.add_argument("--seed", type=int, default=0,
+                      help="base RNG seed (request i uses seed + i)")
     ap.add_argument("--prompt", type=int, default=16,
                     help="max prompt length (sampled 4..this)")
     ap.add_argument("--steps", type=int, default=8,
@@ -103,6 +118,9 @@ def main():
         ap.error(f"--prompt {args.prompt} + --steps {args.steps} cannot fit "
                  f"--max-len {args.max_len}; raise --max-len or shrink the "
                  "requests")
+    if args.samples > 1 and args.layout != "paged":
+        ap.error(f"--samples {args.samples} needs --layout paged "
+                 "(parallel samples share prefill KV via COW page forking)")
 
     cfg = configs.get(args.arch)
     if args.reduced:
@@ -121,6 +139,10 @@ def main():
     rng = np.random.default_rng(0)
 
     if args.static:
+        if args.temperature > 0 or args.samples > 1 or args.top_k > 0 \
+                or args.top_p < 1.0:
+            print("warning: --static is greedy single-sample only; ignoring "
+                  "--temperature/--top-k/--top-p/--samples/--seed")
         prompts = rng.integers(0, cfg.vocab_size,
                                (args.requests, args.prompt)).astype(np.int32)
         task_ids = rng.integers(0, n_tasks, args.requests).astype(np.int32)
@@ -135,6 +157,20 @@ def main():
             print(f"  [stream] req {req.rid} task={req.task_id} "
                   f"tok#{len(req.out)}: {tok}")
 
+    sampling = None
+    if args.temperature > 0 or args.samples > 1:
+        sampling = SamplingParams(
+            temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+            n=args.samples)
+        print(f"sampling: temp={args.temperature} top_k={args.top_k} "
+              f"top_p={args.top_p} n={args.samples} (seeded per request)")
+    if args.temperature <= 0 and (args.top_k > 0 or args.top_p < 1.0):
+        print("warning: --top-k/--top-p have no effect at --temperature 0 "
+              "(greedy argmax)")
+    if args.temperature <= 0 and args.samples > 1:
+        print(f"warning: --samples {args.samples} at --temperature 0 forks "
+              f"{args.samples} identical greedy continuations")
+
     arrivals, t = [], 0.0
     for i in range(args.requests):
         t += rng.exponential(1.0 / max(args.rate, 1e-6))
@@ -143,7 +179,9 @@ def main():
             rid=i, prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
             task_id=int(rng.integers(0, n_tasks)),
             max_new_tokens=int(rng.integers(2, args.steps + 1)),
-            on_token=on_token)
+            on_token=on_token,
+            sampling=None if sampling is None
+            else dataclasses.replace(sampling, seed=args.seed + i))
         arrivals.append((int(t), req))
 
     sched = ContinuousScheduler(eng, SchedulerConfig(
@@ -159,12 +197,19 @@ def main():
         print(f"paged pool: {pool.num_blocks - 1} usable pages x "
               f"{pool.block_size} tokens, peak concurrency "
               f"{sched.peak_running}, {sched.prefill_chunks_run} prefill "
-              f"chunks, {sched.preemptions} preemptions")
+              f"chunks, {sched.preemptions} preemptions, {pool.forks} forks, "
+              f"{pool.cow_copies} COW page copies")
     for rid in sorted(finished):
         req = finished[rid]
         ms = (req.t_done - req.t_submit) * 1e3
-        print(f"req {rid} task={req.task_id} plen={len(req.prompt)} "
-              f"latency={ms:.0f}ms: {req.out}")
+        if req.samples is not None:
+            print(f"req {rid} task={req.task_id} plen={len(req.prompt)} "
+                  f"latency={ms:.0f}ms ({len(req.samples)} samples):")
+            for i, s in enumerate(req.samples):
+                print(f"    sample {i}: {s}")
+        else:
+            print(f"req {rid} task={req.task_id} plen={len(req.prompt)} "
+                  f"latency={ms:.0f}ms: {req.out}")
 
 
 if __name__ == "__main__":

@@ -34,6 +34,7 @@ from repro.core import aot as aot_mod
 from repro.core import peft as peft_mod
 from repro.kernels.decode_attention import round_kv_len
 from repro.models.model import Model
+from repro.serve.sampling import sample_tokens
 
 
 @dataclass(frozen=True)
@@ -68,6 +69,9 @@ class ServeEngine:
         self._prefill_at = jax.jit(self._prefill_at_impl)
         self._extend = jax.jit(self._extend_impl)
         self._decode_paged = jax.jit(self._decode_paged_impl)
+        self._decode_sampled = jax.jit(self._decode_sampled_impl)
+        self._decode_paged_sampled = jax.jit(self._decode_paged_sampled_impl)
+        self._sample_row = jax.jit(self._sample_row_impl)
 
     # ------------------------------------------------------------------
     def _peft_for(self, task_ids):
@@ -105,6 +109,32 @@ class ServeEngine:
         return self.model.decode_step(params, tokens, pos, cache, peft,
                                       block_tables=block_tables)
 
+    # sampled variants: the decode step and the per-slot token draw fuse
+    # into one jitted pass (temperature 0 rows reduce to exact argmax)
+    def _decode_sampled_impl(self, params, tokens, pos, cache, task_ids,
+                             temps, top_ks, top_ps, base_keys, steps):
+        logits, cache = self._decode_impl(params, tokens, pos, cache, task_ids)
+        toks = sample_tokens(logits[:, -1], temps, top_ks, top_ps,
+                             base_keys, steps)
+        return toks, cache
+
+    def _decode_paged_sampled_impl(self, params, tokens, pos, cache, task_ids,
+                                   block_tables, temps, top_ks, top_ps,
+                                   base_keys, steps):
+        logits, cache = self._decode_paged_impl(params, tokens, pos, cache,
+                                                task_ids, block_tables)
+        toks = sample_tokens(logits[:, -1], temps, top_ks, top_ps,
+                             base_keys, steps)
+        return toks, cache
+
+    def _sample_row_impl(self, logits_row, temps, top_ks, top_ps, base_keys,
+                         steps):
+        """Draw ``n`` first tokens from ONE prefill logits row — one draw
+        per parallel sample, each under its own stream (n = len(temps))."""
+        rows = jnp.broadcast_to(logits_row[None, :],
+                                (temps.shape[0], logits_row.shape[-1]))
+        return sample_tokens(rows, temps, top_ks, top_ps, base_keys, steps)
+
     # ------------------------------------------------------------------
     # static-batch serving (the paper's benchmark setting)
     # ------------------------------------------------------------------
@@ -126,10 +156,24 @@ class ServeEngine:
     # ------------------------------------------------------------------
     # continuous-batching primitives (driven by serve.scheduler)
     # ------------------------------------------------------------------
-    def prefill_request(self, tokens: np.ndarray, length: int,
-                        task_id: int) -> Tuple[int, Any]:
+    @staticmethod
+    def _sample_vecs(sample):
+        """Host sample spec (temps, top_ks, top_ps, base_keys, steps) —
+        np arrays — to device args."""
+        temps, top_ks, top_ps, base_keys, steps = sample
+        return (jnp.asarray(temps, jnp.float32),
+                jnp.asarray(top_ks, jnp.int32),
+                jnp.asarray(top_ps, jnp.float32),
+                jnp.asarray(base_keys, jnp.uint32),
+                jnp.asarray(steps, jnp.int32))
+
+    def prefill_request(self, tokens: np.ndarray, length: int, task_id: int,
+                        sample=None) -> Tuple[list, Any]:
         """Prefill one bucket-padded prompt. tokens: (1, bucket) int32;
-        ``length``: real prompt tokens. Returns (first greedy token, cache).
+        ``length``: real prompt tokens. Returns (first tokens, cache) —
+        a single greedy token when ``sample`` is None, else one draw per
+        parallel sample from the spec's (n,)-shaped vectors (the n-samples
+        path: every sample shares this one prefill).
 
         One compilation per distinct bucket length; padding is inert under
         causal attention, so logits at ``length - 1`` and KV rows
@@ -138,58 +182,80 @@ class ServeEngine:
         logits, cache, _ = self._prefill_at(
             self.params, jnp.asarray(tokens), jnp.asarray(length - 1, jnp.int32),
             tids)
-        tok = int(jax.device_get(jnp.argmax(logits[0, -1])))
-        return tok, cache
+        return self._first_tokens(logits, sample), cache
+
+    def _first_tokens(self, logits, sample) -> list:
+        if sample is None:
+            return [int(jax.device_get(jnp.argmax(logits[0, -1])))]
+        toks = self._sample_row(logits[0, -1], *self._sample_vecs(sample))
+        return [int(t) for t in np.asarray(jax.device_get(toks))]
 
     def decode_mixed(self, tokens: np.ndarray, pos: np.ndarray, cache,
-                     task_ids: np.ndarray):
+                     task_ids: np.ndarray, sample=None):
         """One mixed step over all pool slots.
 
         tokens: (num_slots, 1) last token per slot; pos: (num_slots,) per-slot
         depths (== cur_len; the new KV row is written there); task_ids:
         (num_slots,). Free slots ride along with pos=0 and are ignored by the
-        caller. Returns (next greedy token per slot (num_slots,), new cache)."""
-        logits, cache = self._decode(
+        caller. ``sample``: optional per-slot (temps, top_ks, top_ps,
+        base_keys, steps) spec — None keeps the pure-greedy fast path.
+        Returns (next token per slot (num_slots,), new cache)."""
+        if sample is None:
+            logits, cache = self._decode(
+                self.params, jnp.asarray(tokens), jnp.asarray(pos, np.int32),
+                cache, jnp.asarray(task_ids, np.int32))
+            toks = np.asarray(jax.device_get(
+                jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)))
+            return toks, cache
+        toks, cache = self._decode_sampled(
             self.params, jnp.asarray(tokens), jnp.asarray(pos, np.int32),
-            cache, jnp.asarray(task_ids, np.int32))
-        toks = np.asarray(jax.device_get(
-            jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)))
-        return toks, cache
+            cache, jnp.asarray(task_ids, np.int32), *self._sample_vecs(sample))
+        return np.asarray(jax.device_get(toks)), cache
 
     def new_chunk_cache(self, alloc_len: int):
         """Fresh batch=1 contiguous cache for a chunked prefill in flight."""
         return self.model.init_cache(1, alloc_len)
 
     def prefill_chunk(self, tokens: np.ndarray, start: int, cache,
-                      task_id: int, last_pos: int) -> Tuple[int, Any]:
+                      task_id: int, last_pos: int,
+                      sample=None) -> Tuple[list, Any]:
         """Run one prompt chunk against the request's in-flight cache.
 
         tokens: (1, c) the chunk; ``start``: absolute position of its first
-        token; ``last_pos``: chunk-relative position whose logits to argmax
+        token; ``last_pos``: chunk-relative position whose logits to take
         (the prompt's last real token on the final chunk; ignored-but-cheap
-        on earlier chunks). Returns (greedy token at last_pos, new cache)."""
+        on earlier chunks). ``sample``: optional (n,)-shaped spec, only
+        meaningful on the final chunk. Returns (first tokens at last_pos —
+        [greedy] or one per sample — and the new cache)."""
         tids = jnp.full((1,), task_id, jnp.int32)
         logits, cache = self._extend(
             self.params, jnp.asarray(tokens), jnp.asarray(start, jnp.int32),
             cache, jnp.asarray(last_pos, jnp.int32), tids)
-        tok = int(jax.device_get(jnp.argmax(logits[0, -1])))
-        return tok, cache
+        return self._first_tokens(logits, sample), cache
 
     def decode_paged(self, tokens: np.ndarray, pos: np.ndarray, cache,
-                     block_tables: np.ndarray, task_ids: np.ndarray):
+                     block_tables: np.ndarray, task_ids: np.ndarray,
+                     sample=None):
         """One mixed step over a paged KV pool.
 
         tokens: (num_slots, 1); pos: (num_slots,) per-slot depths;
         block_tables: (num_slots, npages) physical page ids (unmapped = 0,
-        the reserved scratch page); task_ids: (num_slots,). Returns
-        (next greedy token per slot, new pool cache)."""
-        logits, cache = self._decode_paged(
+        the reserved scratch page); task_ids: (num_slots,). ``sample``:
+        optional per-slot spec as in :meth:`decode_mixed`. Returns
+        (next token per slot, new pool cache)."""
+        if sample is None:
+            logits, cache = self._decode_paged(
+                self.params, jnp.asarray(tokens), jnp.asarray(pos, np.int32),
+                cache, jnp.asarray(task_ids, np.int32),
+                jnp.asarray(block_tables, np.int32))
+            toks = np.asarray(jax.device_get(
+                jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)))
+            return toks, cache
+        toks, cache = self._decode_paged_sampled(
             self.params, jnp.asarray(tokens), jnp.asarray(pos, np.int32),
             cache, jnp.asarray(task_ids, np.int32),
-            jnp.asarray(block_tables, np.int32))
-        toks = np.asarray(jax.device_get(
-            jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)))
-        return toks, cache
+            jnp.asarray(block_tables, np.int32), *self._sample_vecs(sample))
+        return np.asarray(jax.device_get(toks)), cache
 
     def serve_step_fn(self):
         """The raw jit'd decode step (used by benchmarks and the dry-run)."""

@@ -170,6 +170,27 @@ def _write_pages(pool_cache, req_cache, pages):
     return _WRITE_PAGES(pool_cache, req_cache, jnp.asarray(pages, jnp.int32))
 
 
+def _copy_page_impl(pool_cache, src, dst):
+    """Duplicate physical page ``src`` into ``dst`` on every layer's pool
+    (copy-on-write). Traced page ids: one compilation covers all copies."""
+    def cp(p):      # p: (repeats, num_blocks, bs, kvh, hd)
+        row = jax.lax.dynamic_slice_in_dim(p, src, 1, axis=1)
+        return jax.lax.dynamic_update_slice_in_dim(p, row, dst, axis=1)
+    return jax.tree.map(cp, pool_cache)
+
+
+_COPY_PAGE = None
+
+
+def _copy_page(pool_cache, src, dst):
+    global _COPY_PAGE
+    if _COPY_PAGE is None:
+        donate = (0,) if jax.default_backend() == "tpu" else ()
+        _COPY_PAGE = jax.jit(_copy_page_impl, donate_argnums=donate)
+    return _COPY_PAGE(pool_cache, jnp.asarray(src, jnp.int32),
+                      jnp.asarray(dst, jnp.int32))
+
+
 class PagedKVPool:
     """Block-granular decode cache: a global page pool + per-slot block tables.
 
@@ -178,6 +199,15 @@ class PagedKVPool:
     ``num_slots`` bounds the decode batch width (rows in the mixed step);
     HBM is bounded by pages actually mapped, so num_slots can far exceed
     what a contiguous pool could afford at the same budget.
+
+    Pages are *refcounted* so slots can share them: :meth:`fork` claims a
+    new slot whose block table aliases every page of the source slot (the
+    n-samples-per-prompt path — one prefill, near-zero extra HBM), and
+    :meth:`ensure_append_page` copies a shared tail page on the first
+    divergent append (copy-on-write). Reads never need COW: pages below a
+    slot's depth are append-only history, identical for every sharer.
+    ``free`` decrements refcounts and only returns refcount-zero pages to
+    the free list.
     """
 
     def __init__(self, model, num_slots: int, max_len: int,
@@ -203,6 +233,9 @@ class PagedKVPool:
         # unmapped table entries read it fully masked
         self._free_blocks: List[int] = list(range(num_blocks - 1, 0, -1))
         self._pages: Dict[int, List[int]] = {}
+        self._refs = np.zeros(num_blocks, np.int32)  # sharers per page
+        self.forks = 0
+        self.cow_copies = 0
 
     # ------------------------------------------------------------------
     # capacity queries
@@ -246,21 +279,59 @@ class PagedKVPool:
         self.cur_len[slot] = 0
         pages = [self._free_blocks.pop() for _ in range(npages)]
         self._pages[slot] = pages
+        self._refs[pages] = 1
         self.block_tables[slot, :npages] = pages
         return slot
 
+    def fork(self, slot: int) -> Optional[int]:
+        """Claim a new slot sharing every page of ``slot`` (refcount bump,
+        zero page copies). The forked slot inherits depth and task id; the
+        first divergent append on either sharer triggers COW in
+        :meth:`ensure_append_page`. Returns None when no slot is free."""
+        if slot not in self._used_slots:
+            raise ValueError(f"slot {slot} is not allocated")
+        if not self._free_slots:
+            return None
+        new = self._free_slots.pop()
+        self._used_slots.add(new)
+        pages = list(self._pages[slot])
+        self._pages[new] = pages
+        for p in pages:
+            self._refs[p] += 1
+        self.block_tables[new] = self.block_tables[slot]
+        self.cur_len[new] = self.cur_len[slot]
+        self.task_id[new] = self.task_id[slot]
+        self.forks += 1
+        return new
+
     def ensure_append_page(self, slot: int) -> bool:
-        """Map the page holding depth ``cur_len[slot]`` (the next decode
-        append). Returns False when the pool is out of pages — the caller
-        must preempt someone or stall."""
+        """Map (and exclusively own) the page holding depth ``cur_len[slot]``
+        — the next decode append. A shared tail page (refcount > 1 after a
+        fork) is copied to a fresh page first, so sharers never see each
+        other's divergent rows; the last sharer left writes in place.
+        Returns False when the pool is out of pages — the caller must
+        preempt someone or stall."""
         need = int(self.cur_len[slot]) // self.block_size
         pages = self._pages[slot]
         if need < len(pages):
+            page = pages[need]
+            if self._refs[page] == 1:
+                return True
+            if not self._free_blocks:   # COW needs a destination page
+                return False
+            new = self._free_blocks.pop()
+            self.cache = _copy_page(self.cache, page, new)
+            self._refs[page] -= 1
+            self._refs[new] = 1
+            pages[need] = new
+            self.block_tables[slot, need] = new
+            self.cow_copies += 1
             return True
         assert need == len(pages), "append skipped a page"
         if not self._free_blocks:
             return False
         page = self._free_blocks.pop()
+        self._refs[page] = 1
         pages.append(page)
         self.block_tables[slot, need] = page
         return True
@@ -269,7 +340,10 @@ class PagedKVPool:
         if slot not in self._used_slots:
             raise ValueError(f"slot {slot} is not allocated")
         self._used_slots.remove(slot)
-        self._free_blocks.extend(reversed(self._pages.pop(slot)))
+        for page in reversed(self._pages.pop(slot)):
+            self._refs[page] -= 1
+            if self._refs[page] == 0:
+                self._free_blocks.append(page)
         self.block_tables[slot] = 0
         self.cur_len[slot] = 0
         self.task_id[slot] = 0
@@ -304,7 +378,9 @@ class PagedKVPool:
 
     # ------------------------------------------------------------------
     def check_no_leaks(self) -> None:
-        """Invariant: slots and pages each partition exactly into free/used."""
+        """Invariant: slots partition into free/used; every page's refcount
+        equals the number of slots mapping it; the free list is exactly the
+        refcount-zero pages (scratch page 0 excluded)."""
         free = set(self._free_slots)
         assert len(self._free_slots) == len(free), "duplicate slots on free list"
         assert not (free & self._used_slots), "slot both free and used"
@@ -314,13 +390,15 @@ class PagedKVPool:
         fb = set(self._free_blocks)
         assert len(self._free_blocks) == len(fb), "duplicate pages on free list"
         assert 0 not in fb, "scratch page leaked onto the free list"
-        used_pages: Set[int] = set()
+        refs = np.zeros(self.num_blocks, np.int32)
         for slot, pages in self._pages.items():
             ps = set(pages)
             assert len(pages) == len(ps), f"slot {slot} double-mapped a page"
-            assert not (ps & used_pages), "page mapped by two slots"
+            assert 0 not in ps, f"slot {slot} mapped the scratch page"
             assert len(pages) >= self.pages_needed(int(self.cur_len[slot])), (
                 f"slot {slot} is deeper than its mapped pages")
-            used_pages |= ps
-        assert not (fb & used_pages), "page both free and mapped"
-        assert fb | used_pages == set(range(1, self.num_blocks)), "lost page"
+            refs[pages] += 1
+        assert np.array_equal(refs, self._refs), "page refcounts out of sync"
+        mapped = {p for pages in self._pages.values() for p in pages}
+        assert not (fb & mapped), "page both free and mapped"
+        assert fb | mapped == set(range(1, self.num_blocks)), "lost page"

@@ -37,6 +37,15 @@ Greedy decode here is token-for-token identical to per-request static
 per-slot decode writes/reads the same cache rows a dedicated cache would
 (pages are just a scattered layout of those rows), and masked (invalid)
 rows never contribute (see tests/test_serve_scheduler).
+
+Stochastic decode (``Request.sampling``) keeps every one of those
+contracts. Each sample owns a counter-based RNG stream —
+``fold_in(fold_in(PRNGKey(seed), sample_idx), token_index)`` — so a draw
+depends only on request constants, never on batch composition or slot
+assignment; preempt-and-recompute replays the identical stream instead of
+relying on argmax determinism. ``n > 1`` parallel samples prefill ONCE and
+fork the request's KV pages copy-on-write (:meth:`PagedKVPool.fork`), so
+extra samples cost only their divergent decode pages.
 """
 from __future__ import annotations
 
@@ -49,19 +58,28 @@ import numpy as np
 
 from repro.serve.engine import ServeEngine
 from repro.serve.kv_pool import PagedKVPool, SlotKVPool
+from repro.serve.sampling import SamplingParams, request_base_key
 
 QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
 
 
 @dataclass
 class Request:
-    """One serving request. ``on_token`` streams tokens as they decode."""
+    """One serving request. ``on_token`` streams tokens as they decode.
+
+    ``sampling`` (None = greedy) controls temperature/top-k/top-p, the RNG
+    seed, stop tokens, and ``n`` parallel samples. For ``n > 1`` the
+    finished request's ``samples`` holds every sample's tokens (and ``out``
+    aliases sample 0); the scheduler internally runs each sample as a child
+    request (``parent``/``sample_idx`` set) sharing one prefill via COW
+    page forking — ``on_token`` callbacks receive those children."""
     rid: int
     prompt: np.ndarray                  # (s,) int32
     task_id: int = 0
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
     on_token: Optional[Callable[["Request", int], None]] = None
+    sampling: Optional[SamplingParams] = None
     # filled in by the scheduler
     out: List[int] = field(default_factory=list)
     state: str = QUEUED
@@ -69,6 +87,10 @@ class Request:
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
+    # n>1 bookkeeping: parent aggregates its per-sample children
+    samples: Optional[List[Optional[List[int]]]] = None
+    parent: Optional["Request"] = None
+    sample_idx: int = 0
 
 
 @dataclass(frozen=True)
@@ -96,13 +118,15 @@ class _Prefill:
     chunk: int                          # chunk size for this prompt
     done: int = 0                       # tokens processed so far
     cache: Any = None                   # per-request temp contiguous cache
-    tok: int = -1                       # greedy token after the last chunk
 
 
 class ContinuousScheduler:
     """Drives a ServeEngine + KV pool over an online request stream."""
 
-    def __init__(self, engine: ServeEngine, cfg: SchedulerConfig = SchedulerConfig()):
+    def __init__(self, engine: ServeEngine, cfg: Optional[SchedulerConfig] = None):
+        # default constructed here, not in the signature: a shared default
+        # instance would alias across schedulers (mutable-default footgun)
+        cfg = cfg if cfg is not None else SchedulerConfig()
         mcfg = engine.model.cfg
         assert mcfg.causal, (
             "continuous batching pads prompts to buckets; that is only "
@@ -140,6 +164,12 @@ class ContinuousScheduler:
         self.running: Dict[int, Request] = {}        # slot -> request
         self.finished: Dict[int, Request] = {}       # rid -> request
         self.slot_tokens = np.zeros((cfg.num_slots, 1), np.int32)
+        # per-slot sampling vectors, threaded into the jitted decode step
+        self.slot_temps = np.zeros(cfg.num_slots, np.float32)
+        self.slot_topk = np.zeros(cfg.num_slots, np.int32)
+        self.slot_topp = np.ones(cfg.num_slots, np.float32)
+        self.slot_keys = np.zeros((cfg.num_slots, 2), np.uint32)
+        self.slot_steps = np.zeros(cfg.num_slots, np.int32)
         self.clock = 0                               # decode-step counter
         self.steps_decoded = 0
         self.tokens_emitted = 0
@@ -155,18 +185,36 @@ class ContinuousScheduler:
         return isinstance(self.pool, PagedKVPool)
 
     # ------------------------------------------------------------------
+    def _max_new(self, req: Request) -> int:
+        sp = req.sampling
+        return sp.max_tokens if (sp is not None and sp.max_tokens) \
+            else req.max_new_tokens
+
+    def _base_key(self, req: Request) -> np.ndarray:
+        if req.sampling is None:
+            return np.zeros(2, np.uint32)
+        return request_base_key(req.sampling.seed, req.sample_idx)
+
     def submit(self, req: Request) -> None:
         s = len(req.prompt)
         assert s >= 1, "empty prompt"
-        if req.max_new_tokens < 1:
+        sp = req.sampling
+        if sp is not None:
+            sp.validate()
+            if sp.n > 1 and not self.paged:
+                raise ValueError(
+                    f"request {req.rid}: n={sp.n} parallel samples need "
+                    "kv_layout='paged' (COW page forking)")
+        max_new = self._max_new(req)
+        if max_new < 1:
             raise ValueError(
                 f"request {req.rid}: max_new_tokens must be >= 1 "
-                f"(got {req.max_new_tokens})")
+                f"(got {max_new})")
         # the last generated token is emitted without being fed back, so the
         # deepest KV row written is prompt + max_new - 2
-        if s + req.max_new_tokens - 1 > self.max_len:
+        if s + max_new - 1 > self.max_len:
             raise ValueError(
-                f"request {req.rid}: prompt {s} + {req.max_new_tokens} new "
+                f"request {req.rid}: prompt {s} + {max_new} new "
                 f"tokens does not fit max_len {self.max_len}")
         req.state = QUEUED
         req.t_submit = time.perf_counter()
@@ -182,20 +230,39 @@ class ContinuousScheduler:
         """Record one generated token; returns True when the request is done."""
         if not req.out:
             req.t_first = time.perf_counter()
+            if req.parent is not None and req.parent.t_first == 0.0:
+                req.parent.t_first = req.t_first
         req.out.append(tok)
         self.tokens_emitted += 1
         if req.on_token is not None:
             req.on_token(req, tok)
-        done = len(req.out) >= req.max_new_tokens or (
-            req.eos_id is not None and tok == req.eos_id)
+        sp = req.sampling
+        done = len(req.out) >= self._max_new(req) or (
+            req.eos_id is not None and tok == req.eos_id) or (
+            sp is not None and tok in sp.stop)
         return done
 
     def _finish(self, req: Request) -> None:
         self.running.pop(req.slot, None)
         self.pool.free(req.slot)
+        self.slot_temps[req.slot] = 0.0     # freed rows ride along as greedy
         req.state = FINISHED
         req.t_done = time.perf_counter()
-        self.finished[req.rid] = req
+        if req.parent is not None:
+            self._finish_sample(req)
+        else:
+            self.finished[req.rid] = req
+
+    def _finish_sample(self, child: Request) -> None:
+        """A per-sample child finished; complete the parent when the last
+        sibling lands."""
+        parent = child.parent
+        parent.samples[child.sample_idx] = child.out
+        if all(s is not None for s in parent.samples):
+            parent.out = list(parent.samples[0])
+            parent.state = FINISHED
+            parent.t_done = child.t_done
+            self.finished[parent.rid] = parent
 
     # ------------------------------------------------------------------
     # admission (bucketed prefill; optionally chunked across ticks)
@@ -224,22 +291,89 @@ class ContinuousScheduler:
             return self.pool.free_blocks() >= need
         return True
 
-    def _install(self, req: Request, slot: int, cache, length: int,
-                 prefill_tok: int) -> None:
-        """Write the prefilled cache into the pool and start decoding."""
-        self.pool.write_prefill(slot, cache, length)
+    def _first_sample_spec(self, req: Request):
+        """Sampling spec for the first-token draw from the prefill logits.
+
+        None (exact argmax) for greedy singles and for recompute installs —
+        a recomputed request's pending token was already emitted, so its
+        prefill logits are never sampled. A fresh stochastic request draws
+        token 0 under ``fold_in(base_key, 0)``; a fresh n>1 parent draws n
+        first tokens, one per sample stream, from the SAME prefill row."""
+        sp = req.sampling
+        if sp is None or req.out:
+            return None
+        fresh_parent = req.parent is None and sp.n > 1
+        if sp.greedy and not fresh_parent:
+            return None
+        idxs = list(range(sp.n)) if fresh_parent else [req.sample_idx]
+        n = len(idxs)
+        return (np.full(n, sp.temperature, np.float32),
+                np.full(n, sp.top_k, np.int32),
+                np.full(n, sp.top_p, np.float32),
+                np.stack([request_base_key(sp.seed, i) for i in idxs]),
+                np.zeros(n, np.int32))
+
+    def _make_child(self, parent: Request, i: int) -> Request:
+        child = Request(
+            rid=parent.rid, prompt=parent.prompt, task_id=parent.task_id,
+            max_new_tokens=parent.max_new_tokens, eos_id=parent.eos_id,
+            on_token=parent.on_token, sampling=parent.sampling,
+            parent=parent, sample_idx=i)
+        child.t_submit = parent.t_submit
+        return child
+
+    def _install_single(self, req: Request, slot: int, tok: int) -> None:
+        """Start one sample decoding from its freshly-populated slot."""
         req.state, req.slot = RUNNING, slot
         self._seq += 1
         self._admit_seq[slot] = self._seq
         self.running[slot] = req
+        sp = req.sampling
+        self.slot_temps[slot] = sp.temperature if sp is not None else 0.0
+        self.slot_topk[slot] = sp.top_k if sp is not None else 0
+        self.slot_topp[slot] = sp.top_p if sp is not None else 1.0
+        self.slot_keys[slot] = self._base_key(req)
         if req.out:
             # recompute after preemption: the pending input token was already
-            # emitted; greedy determinism guarantees prefill_tok == out[-1]
+            # emitted; feed it back and let the counter-based stream resume
+            # at fold_in(base_key, len(out)) — no determinism assumption
             self.slot_tokens[slot, 0] = req.out[-1]
         else:
-            self.slot_tokens[slot, 0] = prefill_tok
-            if self._emit(req, prefill_tok):
+            self.slot_tokens[slot, 0] = tok
+            if self._emit(req, tok):
                 self._finish(req)
+
+    def _install(self, req: Request, slot: int, cache, length: int,
+                 prefill_toks: List[int]) -> None:
+        """Write the prefilled cache into the pool and start decoding.
+
+        A fresh ``n > 1`` request expands here: the prefilled slot becomes
+        sample 0, and every other sample forks it copy-on-write (sharing
+        the prompt's pages). When the pool has no slot left to fork into, a
+        sample is requeued as an independent request instead — its
+        counter-based stream makes the tokens identical either way, only
+        the prefill sharing is lost."""
+        self.pool.write_prefill(slot, cache, length)
+        sp = req.sampling
+        if req.out or req.parent is not None or sp is None or sp.n == 1:
+            self._install_single(req, slot, prefill_toks[0])
+            return
+        req.samples = [None] * sp.n
+        req.state = RUNNING
+        children = [self._make_child(req, i) for i in range(sp.n)]
+        slots = {0: slot}
+        pending: List[Request] = []
+        for i in range(1, sp.n):        # fork before any child can finish
+            forked = self.pool.fork(slot)
+            if forked is None:
+                pending.append(children[i])
+            else:
+                slots[i] = forked
+        for i, child in enumerate(children):
+            if i in slots:
+                self._install_single(child, slots[i], prefill_toks[i])
+        for child in reversed(pending):
+            self.queue.appendleft(child)
 
     def _admit_whole(self, req: Request) -> None:
         """Old path: the entire (bucket-padded) prompt in one prefill call."""
@@ -250,8 +384,9 @@ class ContinuousScheduler:
         bucket = self._bucket(s)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :s] = toks_full
-        tok, cache = self.engine.prefill_request(toks, s, req.task_id)
-        self._install(req, slot, cache, s, tok)
+        first, cache = self.engine.prefill_request(
+            toks, s, req.task_id, sample=self._first_sample_spec(req))
+        self._install(req, slot, cache, s, first)
 
     def _start_chunked(self, req: Request) -> None:
         toks_full = self._prefill_tokens(req)
@@ -278,14 +413,16 @@ class ContinuousScheduler:
         lo = pf.done
         hi = min(lo + pf.chunk, pf.toks.shape[1])
         last = pf.length - 1
+        final = hi > last   # this chunk holds the prompt's last real token
         last_pos = (last - lo) if lo <= last < hi else (hi - lo - 1)
-        tok, pf.cache = self.engine.prefill_chunk(
-            pf.toks[:, lo:hi], lo, pf.cache, pf.req.task_id, last_pos)
+        first, pf.cache = self.engine.prefill_chunk(
+            pf.toks[:, lo:hi], lo, pf.cache, pf.req.task_id, last_pos,
+            sample=self._first_sample_spec(pf.req) if final else None)
         pf.done = hi
         self.prefill_chunks_run += 1
-        if hi > last:       # final chunk reached the prompt's last real token
+        if final:
             self._prefilling = None
-            self._install(pf.req, pf.slot, pf.cache, pf.length, tok)
+            self._install(pf.req, pf.slot, pf.cache, pf.length, first)
 
     def _admission_tick(self) -> None:
         if self.cfg.prefill_chunk > 0:
@@ -313,6 +450,7 @@ class ContinuousScheduler:
         req = self.running.pop(slot)
         self._admit_seq.pop(slot, None)
         self.pool.free(slot)
+        self.slot_temps[slot] = 0.0
         req.state, req.slot = QUEUED, -1
         self.queue.appendleft(req)
         self.preemptions += 1
@@ -343,21 +481,39 @@ class ContinuousScheduler:
                         "paged KV pool cannot hold a single request; raise "
                         "num_blocks (needs >= max_len/block_size + 1)")
 
+    def _decode_sample_spec(self):
+        """Per-slot sampling vectors for this decode step, or None when
+        every running request is greedy (the pure-argmax fast path). Step
+        counters are refreshed from each request's emitted-token count, so
+        the draw for token j is always keyed fold_in(base, j) no matter
+        how the request got here (fresh, forked, or recomputed)."""
+        stochastic = False
+        for slot, req in self.running.items():
+            self.slot_steps[slot] = len(req.out)
+            sp = req.sampling
+            if sp is not None and sp.temperature > 0.0:
+                stochastic = True
+        if not stochastic:
+            return None
+        return (self.slot_temps, self.slot_topk, self.slot_topp,
+                self.slot_keys, self.slot_steps)
+
     # ------------------------------------------------------------------
     def step(self) -> None:
         """Admit/advance prefill work, then run one mixed decode step over
         every occupied slot."""
         self._admission_tick()
         if self.running:
+            sample = self._decode_sample_spec()
             if self.paged:
                 self._ensure_pages()
                 toks, cache = self.engine.decode_paged(
                     self.slot_tokens, self.pool.cur_len, self.pool.cache,
-                    self.pool.block_tables, self.pool.task_id)
+                    self.pool.block_tables, self.pool.task_id, sample=sample)
             else:
                 toks, cache = self.engine.decode_mixed(
                     self.slot_tokens, self.pool.cur_len, self.pool.cache,
-                    self.pool.task_id)
+                    self.pool.task_id, sample=sample)
             self.pool.cache = cache
             active = list(self.running.items())
             self.peak_running = max(self.peak_running, len(active))
