@@ -19,6 +19,18 @@ by all requests, and each row's scalar-prefetched block-table slice routes
 the BlockSpec index_map to that row's resident pages. Pages at or past the
 row's depth are skipped entirely, so a request costs only the pages it has
 actually mapped.
+
+``ragged_paged_attention_kernel`` generalizes the paged kernel to RAGGED
+per-slot query lengths: the batch is a PACKED token list — decode rows
+contribute one token each, the in-flight prefill-chunk row up to the chunk
+width, free slots zero — and every token carries its owning slot
+(``token_rows``) and absolute position (``token_pos``). Both vectors are
+scalar-prefetched next to the block tables, so one launch serves a mixed
+prefill-chunk + decode batch (the single-device-call scheduler tick) with
+zero padding compute: chunk tokens see kv ``<= token_pos`` through their
+slot's table slice (causal within the chunk, since the chunk's KV is
+scattered before the launch), and dead padding tokens (``token_pos < 0``)
+skip every page and output exact zeros.
 """
 from __future__ import annotations
 
@@ -224,3 +236,110 @@ def paged_decode_attention_kernel(q, k_pages, v_pages, block_tables, cur_len,
         interpret=interpret,
     )(lens, bt, qf, kf, vf)
     return out.reshape(b, kvh * g, hd)
+
+
+# ---------------------------------------------------------------------------
+# ragged paged flash attention (packed mixed prefill-chunk + decode batches)
+# ---------------------------------------------------------------------------
+
+def _ragged_kernel(pos_ref, row_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, sm_scale, block_size, npages,
+                   kvh):
+    pi = pl.program_id(1)
+    tpos = pos_ref[pl.program_id(0) // kvh]
+    total = tpos + 1        # kv rows this token may see (-1 = dead: none)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # pages past the token's own position are never streamed — a decode
+    # token reads its slot's resident pages, a chunk token additionally its
+    # chunk-mates at lower positions (scattered before the launch), and a
+    # dead padding token (pos -1) skips everything, finalizing to zeros
+    @pl.when(pi * block_size < total)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                    # (g, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (bs, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+        kpos = pi * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < total, s, NEG)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(pi == npages - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def ragged_paged_attention_kernel(q, k_pages, v_pages, block_tables,
+                                  token_rows, token_pos, *, sm_scale=None,
+                                  interpret=False):
+    """Ragged flash attention over a paged KV pool: one launch, one PACKED
+    token list mixing prefill-chunk and decode work.
+
+    q: (T, h, hd) — the tick's real tokens, packed: each decode row
+    contributes one token, the in-flight prefill row its chunk, free slots
+    nothing. k_pages / v_pages: (num_blocks, block_size, kvh, hd) with this
+    step's new KV already scattered in; block_tables: (num_slots, npages)
+    int32; token_rows: (T,) int32 — each token's owning slot; token_pos:
+    (T,) int32 — its absolute position (``-1`` marks a dead padding token).
+
+    ``token_rows``/``token_pos`` are scalar-prefetched next to the block
+    tables: each token's BlockSpec index_map dereferences ITS SLOT's table
+    slice, attends over kv positions ``<= token_pos`` (causal within a
+    chunk — lower-positioned chunk-mates were scattered before the launch),
+    and never streams pages past its position. Dead tokens skip every page
+    and produce exact zeros.
+    """
+    T, h, hd = q.shape
+    block_size, kvh = k_pages.shape[1], k_pages.shape[2]
+    npages = block_tables.shape[1]
+    g = h // kvh
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(hd)
+
+    qf = q.reshape(T, kvh, g, hd).reshape(T * kvh, g, hd)
+    kf = k_pages.transpose(2, 0, 1, 3)          # (kvh, num_blocks, bs, hd)
+    vf = v_pages.transpose(2, 0, 1, 3)
+    pos = jnp.asarray(token_pos, jnp.int32)
+    rows = jnp.asarray(token_rows, jnp.int32)
+    bt = jnp.asarray(block_tables, jnp.int32)
+
+    kern = functools.partial(_ragged_kernel, sm_scale=scale,
+                             block_size=block_size, npages=npages, kvh=kvh)
+    page_spec = pl.BlockSpec(
+        (1, 1, block_size, hd),
+        lambda th, pi, pos, rows, bt: (th % kvh, bt[rows[th // kvh], pi], 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(T * kvh, npages),
+        in_specs=[
+            pl.BlockSpec((1, g, hd), lambda th, pi, pos, rows, bt: (th, 0, 0)),
+            page_spec,
+            page_spec,
+        ],
+        out_specs=pl.BlockSpec((1, g, hd),
+                               lambda th, pi, pos, rows, bt: (th, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T * kvh, g, hd), q.dtype),
+        interpret=interpret,
+    )(pos, rows, bt, qf, kf, vf)
+    return out.reshape(T, kvh * g, hd)

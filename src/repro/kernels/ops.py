@@ -14,7 +14,8 @@ import jax.numpy as jnp
 from repro.kernels.aot_bias import (aot_gather_add_kernel,
                                     aot_gather_add_multitask_kernel)
 from repro.kernels.decode_attention import (decode_attention_kernel,
-                                            paged_decode_attention_kernel)
+                                            paged_decode_attention_kernel,
+                                            ragged_paged_attention_kernel)
 from repro.kernels.flash_attention import flash_attention_kernel
 
 
@@ -53,6 +54,18 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, cur_len):
     block_tables: (b, npages); cur_len: (b,). The serve-path paged decode."""
     return paged_decode_attention_kernel(q, k_pages, v_pages, block_tables,
                                          cur_len, interpret=_interpret())
+
+
+@jax.jit
+def ragged_paged_attention(q, k_pages, v_pages, block_tables, token_rows,
+                           token_pos):
+    """q: (T, h, hd) packed tokens; pages: (num_blocks, block_size, kvh,
+    hd); block_tables: (num_slots, npages); token_rows/token_pos: (T,).
+    The unified serve-path mixed prefill-chunk + decode attention (one
+    launch per tick, zero padding compute)."""
+    return ragged_paged_attention_kernel(q, k_pages, v_pages, block_tables,
+                                         token_rows, token_pos,
+                                         interpret=_interpret())
 
 
 @jax.jit

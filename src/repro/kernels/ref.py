@@ -65,6 +65,27 @@ def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, cur_len,
     return decode_attention_ref(q, k, v, cur_len, sm_scale=sm_scale)
 
 
+def ragged_paged_attention_ref(q, k_pages, v_pages, block_tables, token_rows,
+                               token_pos, *, sm_scale=None):
+    """q: (T, h, hd) packed tokens; pages: (num_blocks, block_size, kvh, hd);
+    block_tables: (num_slots, npages) int32; token_rows / token_pos: (T,).
+
+    The packed mixed prefill-chunk + decode contract: token t belongs to
+    slot ``token_rows[t]`` at absolute position ``token_pos[t]`` and
+    attends causally (kv position <= its own) over its slot's gathered
+    pages — which is exactly the contiguous decode oracle per token, after
+    the per-token block-table gather. Dead padding tokens
+    (``token_pos < 0``) output exact zeros.
+    """
+    T, h, hd = q.shape
+    bs, kvh = k_pages.shape[1], k_pages.shape[2]
+    bt = jnp.take(block_tables, token_rows, axis=0)           # (T, npages)
+    k = jnp.take(k_pages, bt, axis=0).reshape(T, -1, kvh, hd)
+    v = jnp.take(v_pages, bt, axis=0).reshape(T, -1, kvh, hd)
+    o = decode_attention_ref(q, k, v, token_pos + 1, sm_scale=sm_scale)
+    return jnp.where((token_pos >= 0)[:, None, None], o, 0.0).astype(q.dtype)
+
+
 def aot_gather_add_ref(h, table, ids):
     """The paper's Eq. 1 hot path: H + P[x].
 

@@ -184,21 +184,32 @@ def main():
             else dataclasses.replace(sampling, seed=args.seed + i))
         arrivals.append((int(t), req))
 
+    if args.prefill_chunk > 0 and args.layout != "paged":
+        print("warning: chunked prefill rides the unified paged serve step; "
+              "--layout slots falls back to whole-prompt prefills")
+        args.prefill_chunk = 0
     sched = ContinuousScheduler(eng, SchedulerConfig(
         num_slots=args.slots, kv_layout=args.layout,
         block_size=args.block_size, num_blocks=args.num_blocks,
         prefill_chunk=args.prefill_chunk))
     finished = sched.run_stream(arrivals)
-    print(f"\nserved {len(finished)} requests in {sched.steps_decoded} mixed "
-          f"decode steps ({sched.tokens_emitted} tokens, "
+    # a tick is not "one decode step plus maybe one prefill chunk" anymore:
+    # the paged path folds chunk + decode rows into ONE device call, so
+    # report realized dispatches per tick instead of assuming the split
+    # (sched.ticks counts real step() calls; sched.clock fast-forwards
+    # across idle gaps in the arrival stream and would dilute the ratio)
+    per_tick = eng.dispatches / max(sched.ticks, 1)
+    print(f"\nserved {len(finished)} requests in {sched.ticks} ticks: "
+          f"{sched.steps_decoded} decode steps, {sched.prefill_chunks_run} "
+          f"prefill chunks, {sched.tokens_emitted} tokens, "
+          f"{eng.dispatches} device dispatches ({per_tick:.2f}/tick, "
           f"{args.slots} slots, layout={args.layout})")
     if sched.paged:
         pool = sched.pool
         print(f"paged pool: {pool.num_blocks - 1} usable pages x "
               f"{pool.block_size} tokens, peak concurrency "
-              f"{sched.peak_running}, {sched.prefill_chunks_run} prefill "
-              f"chunks, {sched.preemptions} preemptions, {pool.forks} forks, "
-              f"{pool.cow_copies} COW page copies")
+              f"{sched.peak_running}, {sched.preemptions} preemptions, "
+              f"{pool.forks} forks, {pool.cow_copies} COW page copies")
     for rid in sorted(finished):
         req = finished[rid]
         ms = (req.t_done - req.t_submit) * 1e3

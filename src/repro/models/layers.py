@@ -345,6 +345,32 @@ def paged_attention_decode(q, k_pages, v_pages, block_tables, cur_len, *,
     return attention_decode(q, k, v, cur_len, softcap=softcap)
 
 
+def ragged_paged_attention_decode(q, k_pages, v_pages, block_tables,
+                                  token_rows, token_pos, *, softcap=0.0):
+    """Packed ragged mixed-batch attention against a paged KV pool (XLA).
+
+    q: (T, 1, H, hd) — the tick's packed tokens (decode rows one each, the
+    prefill-chunk row up to the chunk width, free slots none);
+    k_pages/v_pages: (num_blocks, block_size, KV, hd) with the step's new
+    KV already scattered in; block_tables: (num_slots, npages) int32;
+    token_rows: (T,) each token's owning slot; token_pos: (T,) its
+    absolute position (-1 = dead padding token).
+
+    Gathers each token's slot pages contiguous and defers to
+    :func:`attention_decode` with per-token valid length ``token_pos + 1``
+    — element-for-element the :func:`paged_attention_decode` computation,
+    so greedy decode parity carries over bitwise. Dead tokens output zeros
+    (matching the Pallas ragged kernel).
+    """
+    T = q.shape[0]
+    bs, kvh, hd = k_pages.shape[1], k_pages.shape[2], k_pages.shape[3]
+    bt = jnp.take(block_tables, token_rows, axis=0)           # (T, npages)
+    k = jnp.take(k_pages, bt, axis=0).reshape(T, -1, kvh, hd)
+    v = jnp.take(v_pages, bt, axis=0).reshape(T, -1, kvh, hd)
+    out = attention_decode(q, k, v, token_pos + 1, softcap=softcap)
+    return jnp.where((token_pos >= 0)[:, None, None, None], out, 0.0)
+
+
 # ---------------------------------------------------------------------------
 # attention module (projections + core)
 # ---------------------------------------------------------------------------

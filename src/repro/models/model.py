@@ -253,7 +253,7 @@ class Model:
     # blocks
     # ------------------------------------------------------------------
     def _attention(self, bp, h_in, positions, peft, peft_u, cache_u, decode_pos,
-                   prompt_len, block_tables=None):
+                   prompt_len, block_tables=None, token_rows=None):
         cfg, opts = self.cfg, self.opts
         dt = opts.compute_dtype
         method = peft["method"] if peft else "none"
@@ -273,7 +273,37 @@ class Model:
         softcap = cfg.logit_softcap
         new_cache = cache_u
 
-        if cache_u is not None and decode_pos is not None and block_tables is not None:
+        if cache_u is not None and token_rows is not None and block_tables is not None:
+            # ---- unified ragged mixed step: the batch axis is a PACKED
+            # token list (decode rows one token each, the prefill-chunk row
+            # its chunk, zero padding compute). decode_pos carries each
+            # token's absolute position (-1 = dead padding token); its K/V
+            # scatters straight into its slot's mapped pool pages — no temp
+            # cache — and attention runs the ragged kernel over that slot's
+            # resident pages ----
+            if window:
+                raise NotImplementedError(
+                    "paged serving has no sliding-window masking; serve SWA "
+                    "models with the contiguous slot layout")
+            bs_page = cache_u["k"].shape[1]
+            live = decode_pos >= 0
+            pos = jnp.maximum(decode_pos, 0)
+            # dead tokens scatter to scratch page 0 (never read unmasked)
+            page = jnp.where(live,
+                             block_tables[token_rows, pos // bs_page], 0)
+            off = pos % bs_page
+            kc = cache_u["k"].at[page, off].set(k[:, 0].astype(cache_u["k"].dtype))
+            vc = cache_u["v"].at[page, off].set(v[:, 0].astype(cache_u["v"].dtype))
+            if opts.attn_impl == "pallas" and not softcap:
+                from repro.kernels import ops as kops
+                o = kops.ragged_paged_attention(q[:, 0], kc, vc, block_tables,
+                                                token_rows, decode_pos)[:, None]
+            else:
+                o = L.ragged_paged_attention_decode(q, kc, vc, block_tables,
+                                                    token_rows, decode_pos,
+                                                    softcap=softcap)
+            new_cache = {"k": kc, "v": vc}
+        elif cache_u is not None and decode_pos is not None and block_tables is not None:
             # ---- paged decode: cache leaves are the global page pool
             # (num_blocks, block_size, kvh, hd); each row's new KV lands in
             # the page its block table maps for depth decode_pos ----
@@ -295,17 +325,6 @@ class Model:
             else:
                 o = L.paged_attention_decode(q, kc, vc, block_tables, valid,
                                              softcap=softcap)
-            new_cache = {"k": kc, "v": vc}
-        elif cache_u is not None and decode_pos is not None and s > 1:
-            # ---- chunked-prefill extend: write a whole chunk of KV at
-            # offset decode_pos, attend causally over the cache so far ----
-            kc = jax.lax.dynamic_update_slice(
-                cache_u["k"], k.astype(cache_u["k"].dtype), (0, decode_pos, 0, 0))
-            vc = jax.lax.dynamic_update_slice(
-                cache_u["v"], v.astype(cache_u["v"].dtype), (0, decode_pos, 0, 0))
-            o = L.attention_ref(q, kc, vc, causal=True, window=window,
-                                softcap=softcap, q_offset=decode_pos,
-                                kv_valid_len=decode_pos + s)
             new_cache = {"k": kc, "v": vc}
         elif cache_u is not None and decode_pos is not None:
             # ---- decode: write new kv, attend over cache ----
@@ -405,7 +424,7 @@ class Model:
 
     def _block_apply(self, kind, moe_flag, bp, h, *, ids, e_rows, positions,
                      peft, peft_u, rng_layer, cache_u, decode_pos, prompt_len,
-                     block_tables=None):
+                     block_tables=None, token_rows=None):
         """One block. Returns (h, aux, new_cache_u)."""
         cfg, opts = self.cfg, self.opts
         dt = opts.compute_dtype
@@ -424,7 +443,7 @@ class Model:
             if cfg.post_ln:
                 att, new_cache = self._attention(bp, h, positions, peft, peft_u,
                                                  cache_u, decode_pos, prompt_len,
-                                                 block_tables)
+                                                 block_tables, token_rows)
                 h = L.apply_norm(cfg, bp["ln1"], h + att)
                 ffn, aux = self._ffn(bp, h, peft, peft_u, moe_flag)
                 h = L.apply_norm(cfg, bp["ln2"], h + ffn)
@@ -432,7 +451,7 @@ class Model:
                 att, new_cache = self._attention(bp, L.apply_norm(cfg, bp["ln1"], h),
                                                  positions, peft, peft_u,
                                                  cache_u, decode_pos, prompt_len,
-                                                 block_tables)
+                                                 block_tables, token_rows)
                 # SP-sharded, (b, s/TP, d)-sized: cheap to save so the remat
                 # policy can skip recomputing attention in the backward pass
                 att = checkpoint_name(att, "attn_mix")
@@ -482,7 +501,7 @@ class Model:
 
     def _group_apply(self, gparams, plan: GroupPlan, h, *, ids, e_rows,
                      positions, peft, rng, gcache, decode_pos, prompt_len,
-                     block_tables=None):
+                     block_tables=None, token_rows=None):
         opts = self.opts
         U = len(plan.kinds)
         peft_xs = self._peft_group_xs(peft, plan)          # (R, U, ...) or None
@@ -502,7 +521,7 @@ class Model:
                     positions=positions, peft=peft, peft_u=peft_u,
                     rng_layer=rng_layer, cache_u=cache_u,
                     decode_pos=decode_pos, prompt_len=prompt_len,
-                    block_tables=block_tables)
+                    block_tables=block_tables, token_rows=token_rows)
                 auxs.append(aux)
                 new_caches.append(nc)
             aux_sum = {}
@@ -759,48 +778,59 @@ class Model:
         h = L.apply_norm(cfg, params["final_norm"], h)
         return self.unembed(params, h), new_cache
 
-    def extend_step(self, params, tokens, start_pos, cache, peft=None,
-                    last_pos=None):
-        """Chunked-prefill extend: run a (b, c) chunk at positions
-        ``start_pos + [0, c)`` against an existing contiguous cache —
-        queries attend causally to every cache row < start_pos + their
-        offset, and the chunk's KV rows are written in place. Causal
-        attention-only stacks (the continuous scheduler's admission path).
-        Returns (logits (b, 1, V) at chunk-relative ``last_pos`` — default
-        the chunk's final row — and the new cache)."""
+    def mixed_step(self, params, tokens, token_rows, token_pos, cache,
+                   peft=None, block_tables=None, logit_idx=None):
+        """One unified ragged prefill+decode step against a paged KV pool —
+        the serve path's single device call per scheduler tick, replacing
+        the old ``extend_step`` (prefill chunk) / ``decode_step`` (append)
+        pair.
+
+        tokens: (T, 1) — the tick's PACKED token list: each decode row
+        contributes its one fed-back token, the in-flight prefill row its
+        next prompt chunk, free slots nothing (zero padding compute beyond
+        the static T). token_rows: (T,) each token's owning pool slot;
+        token_pos: (T,) its absolute position, ``-1`` marking a dead
+        padding token (outputs zeros, KV lands on the scratch page).
+        Every token's new KV scatters directly into its slot's
+        block-table-mapped pool pages (``init_paged_cache`` layout) and
+        attends causally over that slot's resident kv ``<= token_pos`` —
+        chunk tokens see their lower-positioned chunk-mates because the
+        whole scatter precedes attention. ``logit_idx``: (num_slots,)
+        per-SLOT index into the packed axis whose logits to report (a
+        decode row's token; a final prefill chunk's last prompt token;
+        slots without a report position may point anywhere). Causal
+        attention-only stacks. Returns (logits (num_slots, V), new_cache).
+        """
         cfg = self.cfg
         kinds = {k for plan in self.plan for k in plan.kinds}
         assert kinds <= {BLOCK_ATTN}, (
-            f"chunked prefill needs attention-only stacks, got {kinds}")
+            f"the unified mixed step needs attention-only stacks, got {kinds}")
         assert cfg.causal and not cfg.prefix_lm_len, (
-            "chunked prefill relies on causal masking")
-        assert not (cfg.attn_kind == "swa" and self.opts.swa_ring_cache
-                    and cfg.sliding_window), (
-            "chunked prefill writes absolute cache positions; disable the "
-            "SWA ring cache to serve this model")
+            "the unified mixed step relies on causal masking")
+        assert block_tables is not None, "mixed_step serves paged pools only"
         dt = self.opts.compute_dtype
         ids = tokens
         e_rows = jnp.take(params["embed"]["tok"], ids, axis=0)
         h = e_rows.astype(dt)
         if cfg.embed_scale:
             h = h * jnp.asarray(math.sqrt(cfg.d_model), dt)
-        positions = start_pos + jnp.arange(tokens.shape[1])
+        positions = jnp.maximum(token_pos, 0)[:, None]          # (T, 1)
         if cfg.pos_type == "learned":
-            h = h + jnp.take(params["embed"]["pos"], positions, axis=0).astype(dt)[None]
+            h = h + jnp.take(params["embed"]["pos"], positions, axis=0).astype(dt)
         new_cache = []
         for gi, plan in enumerate(self.plan):
             gcache = _unitdict_to_xs(cache[gi])
             h, _, gc = self._group_apply(
                 params["groups"][gi], plan, h, ids=ids, e_rows=e_rows,
                 positions=positions, peft=peft, rng=None, gcache=gcache,
-                decode_pos=start_pos, prompt_len=0)
+                decode_pos=token_pos, prompt_len=0,
+                block_tables=block_tables, token_rows=token_rows)
             new_cache.append(_xs_to_unitdict(gc))
         h = L.apply_norm(cfg, params["final_norm"], h)
-        if last_pos is None:
-            h_last = h[:, -1:]
-        else:
-            h_last = jax.lax.dynamic_slice_in_dim(h, last_pos, 1, axis=1)
-        return self.unembed(params, h_last), new_cache
+        if logit_idx is None:
+            logit_idx = jnp.arange(h.shape[0], dtype=jnp.int32)
+        h_sel = jnp.take(h[:, 0], logit_idx, axis=0)            # (slots, d)
+        return self.unembed(params, h_sel[:, None])[:, 0], new_cache
 
 
 # ---------------------------------------------------------------------------

@@ -10,12 +10,17 @@ Two serving modes share the same jitted model functions:
 
   * ``generate``: static batch — every request arrives together, shares one
     prompt length, finishes together (the paper's benchmark setting).
-  * the continuous path (``prefill_request`` + ``decode_mixed``), driven by
-    :mod:`repro.serve.scheduler`: requests at heterogeneous depths occupy
-    slots of a :class:`repro.serve.kv_pool.SlotKVPool`; one mixed decode
-    step advances every occupied slot with per-slot positions and per-slot
-    task ids. Because the AoT bias is a per-(task, token) gather, a mixed-
-    task batch costs exactly what a single-task batch costs.
+  * the continuous path, driven by :mod:`repro.serve.scheduler`. For the
+    paged KV pool the whole tick is ONE jitted :meth:`serve_step` call — a
+    ragged PACKED token list where each decode row contributes one token
+    and the in-flight prefill row its next chunk (every token tagged with
+    its owning slot and position), each token's KV scatters straight into
+    its slot's block-table-mapped pool pages, and per-slot sampling
+    vectors fold the token draw into the same dispatch. The
+    contiguous :class:`repro.serve.kv_pool.SlotKVPool` comparison layout
+    keeps the older ``prefill_request`` + ``decode_mixed`` pair. Because
+    the AoT bias is a per-(task, token) gather, a mixed-task batch costs
+    exactly what a single-task batch costs.
 
 The engine also serves the baselines for the overhead benchmarks
 (Fig. 3): ptv2 (longer effective KV), lora-unfused (extra matmuls),
@@ -23,6 +28,7 @@ bitfit, and plain backbone.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Any, Optional, Tuple
 
@@ -67,11 +73,18 @@ class ServeEngine:
         self._decode = jax.jit(self._decode_impl)
         self._prefill = jax.jit(self._prefill_impl)
         self._prefill_at = jax.jit(self._prefill_at_impl)
-        self._extend = jax.jit(self._extend_impl)
-        self._decode_paged = jax.jit(self._decode_paged_impl)
         self._decode_sampled = jax.jit(self._decode_sampled_impl)
-        self._decode_paged_sampled = jax.jit(self._decode_paged_sampled_impl)
         self._sample_row = jax.jit(self._sample_row_impl)
+        # the unified ragged prefill+decode step: two traces (greedy batches
+        # keep the exact-argmax path), each still ONE dispatch per tick
+        self._serve_greedy = jax.jit(
+            functools.partial(self._serve_step_impl, stochastic=False))
+        self._serve_sampled = jax.jit(
+            functools.partial(self._serve_step_impl, stochastic=True))
+        # host-visible device-dispatch counter (serve-path calls only):
+        # the scheduler asserts one dispatch per unified tick and the
+        # launcher reports dispatches/tick
+        self.dispatches = 0
 
     # ------------------------------------------------------------------
     def _peft_for(self, task_ids):
@@ -98,18 +111,7 @@ class ServeEngine:
         peft = self._peft_for(task_ids)
         return self.model.decode_step(params, tokens, pos, cache, peft)
 
-    def _extend_impl(self, params, tokens, start, cache, last_pos, task_ids):
-        peft = self._peft_for(task_ids)
-        return self.model.extend_step(params, tokens, start, cache, peft,
-                                      last_pos=last_pos)
-
-    def _decode_paged_impl(self, params, tokens, pos, cache, task_ids,
-                           block_tables):
-        peft = self._peft_for(task_ids)
-        return self.model.decode_step(params, tokens, pos, cache, peft,
-                                      block_tables=block_tables)
-
-    # sampled variants: the decode step and the per-slot token draw fuse
+    # sampled variant: the decode step and the per-slot token draw fuse
     # into one jitted pass (temperature 0 rows reduce to exact argmax)
     def _decode_sampled_impl(self, params, tokens, pos, cache, task_ids,
                              temps, top_ks, top_ps, base_keys, steps):
@@ -118,14 +120,23 @@ class ServeEngine:
                              base_keys, steps)
         return toks, cache
 
-    def _decode_paged_sampled_impl(self, params, tokens, pos, cache, task_ids,
-                                   block_tables, temps, top_ks, top_ps,
-                                   base_keys, steps):
-        logits, cache = self._decode_paged_impl(params, tokens, pos, cache,
-                                                task_ids, block_tables)
-        toks = sample_tokens(logits[:, -1], temps, top_ks, top_ps,
-                             base_keys, steps)
-        return toks, cache
+    def _serve_step_impl(self, params, tokens, token_rows, token_pos,
+                         logit_idx, cache, token_tasks, block_tables, temps,
+                         top_ks, top_ps, base_keys, steps, *, stochastic):
+        """The whole paged tick in one jit: unified ragged model step over
+        the packed token list + per-slot token draw. Greedy batches trace
+        with ``stochastic=False`` (pure argmax, the bitwise-parity fast
+        path); the masking/draw work only exists in the stochastic trace."""
+        peft = self._peft_for(token_tasks)
+        logits, cache = self.model.mixed_step(
+            params, tokens, token_rows, token_pos, cache, peft,
+            block_tables=block_tables, logit_idx=logit_idx)
+        if stochastic:
+            toks = sample_tokens(logits, temps, top_ks, top_ps, base_keys,
+                                 steps)
+        else:
+            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return toks, logits, cache
 
     def _sample_row_impl(self, logits_row, temps, top_ks, top_ps, base_keys,
                          steps):
@@ -182,12 +193,20 @@ class ServeEngine:
         logits, cache, _ = self._prefill_at(
             self.params, jnp.asarray(tokens), jnp.asarray(length - 1, jnp.int32),
             tids)
+        self.dispatches += 1
         return self._first_tokens(logits, sample), cache
 
     def _first_tokens(self, logits, sample) -> list:
         if sample is None:
             return [int(jax.device_get(jnp.argmax(logits[0, -1])))]
-        toks = self._sample_row(logits[0, -1], *self._sample_vecs(sample))
+        return self.sample_first(logits[0, -1], sample)
+
+    def sample_first(self, logits_row, sample) -> list:
+        """Draw the spec's first tokens from ONE logits row — the n>1
+        parallel-samples path, where every sample's token 0 comes from the
+        same prefill row under its own stream."""
+        toks = self._sample_row(logits_row, *self._sample_vecs(sample))
+        self.dispatches += 1
         return [int(t) for t in np.asarray(jax.device_get(toks))]
 
     def decode_mixed(self, tokens: np.ndarray, pos: np.ndarray, cache,
@@ -200,6 +219,7 @@ class ServeEngine:
         caller. ``sample``: optional per-slot (temps, top_ks, top_ps,
         base_keys, steps) spec — None keeps the pure-greedy fast path.
         Returns (next token per slot (num_slots,), new cache)."""
+        self.dispatches += 1
         if sample is None:
             logits, cache = self._decode(
                 self.params, jnp.asarray(tokens), jnp.asarray(pos, np.int32),
@@ -212,51 +232,31 @@ class ServeEngine:
             cache, jnp.asarray(task_ids, np.int32), *self._sample_vecs(sample))
         return np.asarray(jax.device_get(toks)), cache
 
-    def new_chunk_cache(self, alloc_len: int):
-        """Fresh batch=1 contiguous cache for a chunked prefill in flight."""
-        return self.model.init_cache(1, alloc_len)
+    def serve_step(self, tokens: np.ndarray, token_rows: np.ndarray,
+                   token_pos: np.ndarray, logit_idx: np.ndarray, cache,
+                   block_tables: np.ndarray, token_tasks: np.ndarray, sample):
+        """The unified ragged prefill+decode tick — ONE jitted device call
+        regardless of batch composition.
 
-    def prefill_chunk(self, tokens: np.ndarray, start: int, cache,
-                      task_id: int, last_pos: int,
-                      sample=None) -> Tuple[list, Any]:
-        """Run one prompt chunk against the request's in-flight cache.
-
-        tokens: (1, c) the chunk; ``start``: absolute position of its first
-        token; ``last_pos``: chunk-relative position whose logits to take
-        (the prompt's last real token on the final chunk; ignored-but-cheap
-        on earlier chunks). ``sample``: optional (n,)-shaped spec, only
-        meaningful on the final chunk. Returns (first tokens at last_pos —
-        [greedy] or one per sample — and the new cache)."""
-        tids = jnp.full((1,), task_id, jnp.int32)
-        logits, cache = self._extend(
-            self.params, jnp.asarray(tokens), jnp.asarray(start, jnp.int32),
-            cache, jnp.asarray(last_pos, jnp.int32), tids)
-        return self._first_tokens(logits, sample), cache
-
-    def decode_paged(self, tokens: np.ndarray, pos: np.ndarray, cache,
-                     block_tables: np.ndarray, task_ids: np.ndarray,
-                     sample=None):
-        """One mixed step over a paged KV pool.
-
-        tokens: (num_slots, 1); pos: (num_slots,) per-slot depths;
-        block_tables: (num_slots, npages) physical page ids (unmapped = 0,
-        the reserved scratch page); task_ids: (num_slots,). ``sample``:
-        optional per-slot spec as in :meth:`decode_mixed`. Returns
-        (next token per slot, new pool cache)."""
-        if sample is None:
-            logits, cache = self._decode_paged(
-                self.params, jnp.asarray(tokens), jnp.asarray(pos, np.int32),
-                cache, jnp.asarray(task_ids, np.int32),
-                jnp.asarray(block_tables, np.int32))
-            toks = np.asarray(jax.device_get(
-                jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)))
-            return toks, cache
-        toks, cache = self._decode_paged_sampled(
-            self.params, jnp.asarray(tokens), jnp.asarray(pos, np.int32),
-            cache, jnp.asarray(task_ids, np.int32),
+        tokens: (T, 1) the tick's packed token list (each decode row one
+        fed-back token, the in-flight prefill row its chunk, free slots
+        nothing); token_rows / token_pos / token_tasks: (T,) each token's
+        owning slot, absolute position (-1 = dead padding), and task id;
+        logit_idx: (num_slots,) per-slot index into the packed axis whose
+        logits the slot reports; block_tables: (num_slots, npages);
+        ``sample``: the per-slot (temps, top_ks, top_ps, base_keys, steps)
+        vectors — always threaded, all-greedy batches take the exact-argmax
+        trace. The packed width T is whatever the scheduler builds (one
+        compilation per distinct T per greedy/sampled trace — the
+        scheduler's two tick shapes make that at most four).
+        Returns (next token per slot (num_slots,) np, per-slot logits
+        (num_slots, V) still on device, new pool cache)."""
+        temps = np.asarray(sample[0])
+        fn = self._serve_sampled if np.any(temps > 0.0) else self._serve_greedy
+        toks, logits, cache = fn(
+            self.params, jnp.asarray(tokens), jnp.asarray(token_rows, np.int32),
+            jnp.asarray(token_pos, np.int32), jnp.asarray(logit_idx, np.int32),
+            cache, jnp.asarray(token_tasks, np.int32),
             jnp.asarray(block_tables, np.int32), *self._sample_vecs(sample))
-        return np.asarray(jax.device_get(toks)), cache
-
-    def serve_step_fn(self):
-        """The raw jit'd decode step (used by benchmarks and the dry-run)."""
-        return self._decode
+        self.dispatches += 1
+        return np.asarray(jax.device_get(toks)), logits, cache

@@ -371,6 +371,18 @@ class PagedKVPool:
         self.cache = _write_pages(self.cache, req_cache, pages[:npages])
         self.cur_len[slot] = length
 
+    def commit_prefill(self, slot: int, length: int) -> None:
+        """Publish a prefill whose KV the unified serve step already
+        scattered straight into this slot's mapped pages — bookkeeping
+        only, no cache copy (the whole point of the ragged mixed step)."""
+        if length > self.max_len:
+            raise ValueError(f"prompt length {length} exceeds pool max_len "
+                             f"{self.max_len}")
+        assert len(self._pages[slot]) >= self.pages_needed(length), (
+            f"slot {slot}: {len(self._pages[slot])} pages mapped, prefill "
+            f"wrote {length} tokens")
+        self.cur_len[slot] = length
+
     def advance(self, slots) -> None:
         """Record one decode append for each slot in ``slots``."""
         for s in slots:

@@ -102,25 +102,33 @@ def masked_logits(logits, temps, top_ks, top_ps):
     (0 = off); top_ps: (b,) float (1.0 = off). Returns (b, V) logits with
     excluded tokens at the dtype minimum. Per-row heterogeneous settings,
     one fused computation — no python branching on traced values.
+
+    Both filters keep a *prefix* of the descending-sorted row, so the kept
+    set is fully described by one per-row cutoff VALUE: sort values once,
+    find the smallest kept logit, and compare the unsorted row against it.
+    That replaces the old argsort → mask → inverse-argsort scatter (two
+    O(V log V) index sorts plus two gathers) with a single value sort —
+    the decode-path cost that made sampled serving drag behind greedy.
+    (Exact ties at the cutoff are all kept, where rank-order masking would
+    keep only enough to fill k — indistinguishable for real-model logits.)
     """
     logits = logits.astype(jnp.float32)
     V = logits.shape[-1]
     scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
-    order = jnp.argsort(-scaled, axis=-1)               # descending
-    sorted_l = jnp.take_along_axis(scaled, order, axis=-1)
+    sorted_desc = -jnp.sort(-scaled, axis=-1)
     rank = jnp.arange(V)[None, :]
     k = jnp.where(top_ks <= 0, V, jnp.minimum(top_ks, V))[:, None]
     keep = rank < k
-    probs = jax.nn.softmax(sorted_l, axis=-1)
+    probs = jax.nn.softmax(sorted_desc, axis=-1)
     mass_before = jnp.cumsum(probs, axis=-1) - probs    # exclusive cumsum
     # p >= 1 disables nucleus filtering outright: float32 cumsum can round
     # to 1.0 before the tail, which would spuriously mask the last tokens
     keep &= (mass_before < top_ps[:, None]) | (top_ps[:, None] >= 1.0)
     keep = keep.at[:, 0].set(True)                      # never mask rank 0
+    n_keep = keep.sum(axis=-1)                          # kept set is a prefix
+    cutoff = jnp.take_along_axis(sorted_desc, (n_keep - 1)[:, None], axis=-1)
     neg = jnp.finfo(jnp.float32).min
-    masked_sorted = jnp.where(keep, sorted_l, neg)
-    inv = jnp.argsort(order, axis=-1)                   # scatter back
-    return jnp.take_along_axis(masked_sorted, inv, axis=-1)
+    return jnp.where(scaled >= cutoff, scaled, neg)
 
 
 def step_keys(base_keys, steps):

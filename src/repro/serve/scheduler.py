@@ -12,19 +12,26 @@ Two KV layouts share the same request lifecycle:
   * ``kv_layout="paged"`` (default): a :class:`PagedKVPool` — KV pages are
     claimed block-by-block as requests deepen, so HBM is bounded by tokens
     in flight and ``num_slots`` can far exceed what ``num_slots * max_len``
-    contiguous regions would cost. Decode appends route through per-slot
-    block tables; when the pool runs out of pages mid-decode the newest
+    contiguous regions would cost. A tick is ONE jitted
+    ``ServeEngine.serve_step`` call over a RAGGED, PACKED token list:
+    every decode row contributes its one fed-back token, the in-flight
+    prefill row its next prompt chunk (each token tagged with its owning
+    slot and absolute position), free slots nothing — prefill-chunk KV
+    scatters straight into pool pages, so there is no per-request temp
+    cache and no install copy, and padding never exceeds the static
+    packed width. When the pool runs out of pages mid-decode the newest
     request is preempted (freed + requeued) and later *recomputed* —
     greedy decode makes the recompute token-for-token identical.
   * ``kv_layout="slots"``: the contiguous :class:`SlotKVPool` — one
-    ``max_len`` region per slot (kept for comparison benchmarks).
+    ``max_len`` region per slot, whole-prompt bucket prefills plus a
+    separate mixed decode call (kept for comparison benchmarks).
 
-Prefill is bucket-padded (one compilation per bucket). With
-``prefill_chunk > 0`` long prompts are additionally split into fixed-size
-chunks processed one per tick — decode steps run between chunks, so a long
-prompt no longer stalls every running request (head-of-line blocking);
-each tick is then a mixed unit of at most one prefill chunk plus one
-decode step over all running slots.
+Whole-prompt prefill is bucket-padded (one compilation per bucket). With
+``prefill_chunk > 0`` (paged only) prompts instead stream through the
+unified step in fixed-size chunks, one per tick, at the static chunk
+width — decode rows advance in the SAME device call, so a long prompt
+neither stalls running requests (head-of-line blocking) nor costs a
+second dispatch.
 
 Because the AoT bias is a per-(task, token) gather from the fused tables
 (paper Eq. 1), the mixed-task batch costs exactly what a single-task batch
@@ -52,7 +59,7 @@ from __future__ import annotations
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -104,20 +111,22 @@ class SchedulerConfig:
     num_blocks: int = 0                 # physical pages incl. scratch page 0
                                         # (0 = capacity parity with slots)
     prefill_chunk: int = 0              # split prompts into chunks of this
-                                        # many tokens, one per tick (0 = off)
+                                        # many tokens, one per tick, ridden
+                                        # by the unified ragged serve step
+                                        # (paged only; 0 = whole-prompt)
 
 
 @dataclass
 class _Prefill:
     """A chunked prefill in flight: the request holds its slot (and pages)
-    while its prompt streams through chunk-by-chunk between decode steps."""
+    while its prompt streams through the unified serve step chunk-by-chunk
+    — each chunk is just a ragged row of the tick's single device call,
+    scattering its KV straight into the slot's mapped pool pages."""
     req: Request
     slot: int
-    toks: np.ndarray                    # (1, bucket) padded tokens
-    length: int                         # real tokens (prompt [+ recompute])
-    chunk: int                          # chunk size for this prompt
+    toks: np.ndarray                    # (s,) the tokens to prefill
+    length: int                         # == len(toks): prompt [+ recompute]
     done: int = 0                       # tokens processed so far
-    cache: Any = None                   # per-request temp contiguous cache
 
 
 class ContinuousScheduler:
@@ -150,6 +159,9 @@ class ContinuousScheduler:
                     and mcfg.sliding_window), (
             f"{mcfg.name}: paged decode has no sliding-window masking yet; "
             "serve SWA models with kv_layout='slots'")
+        assert not (cfg.prefill_chunk > 0 and cfg.kv_layout == "slots"), (
+            "chunked prefill rides the unified paged serve step; "
+            "kv_layout='slots' serves whole-prompt prefills only")
         self.engine = engine
         self.cfg = cfg
         self.max_len = engine.cfg.max_len
@@ -170,7 +182,9 @@ class ContinuousScheduler:
         self.slot_topp = np.ones(cfg.num_slots, np.float32)
         self.slot_keys = np.zeros((cfg.num_slots, 2), np.uint32)
         self.slot_steps = np.zeros(cfg.num_slots, np.int32)
-        self.clock = 0                               # decode-step counter
+        self.clock = 0                               # arrival-stream clock
+                                                     # (fast-forwards when idle)
+        self.ticks = 0                               # real step() calls
         self.steps_decoded = 0
         self.tokens_emitted = 0
         self.preemptions = 0
@@ -179,6 +193,10 @@ class ContinuousScheduler:
         self._prefilling: Optional[_Prefill] = None
         self._admit_seq: Dict[int, int] = {}         # slot -> admission order
         self._seq = 0
+        # static chunk width of the unified serve step's packed token
+        # list: ticks compile to exactly two shapes (decode-only, and
+        # decode + a chunk of up to _qw tokens)
+        self._qw = max(1, cfg.prefill_chunk)
 
     @property
     def paged(self) -> bool:
@@ -343,9 +361,14 @@ class ContinuousScheduler:
             if self._emit(req, tok):
                 self._finish(req)
 
-    def _install(self, req: Request, slot: int, cache, length: int,
-                 prefill_toks: List[int]) -> None:
-        """Write the prefilled cache into the pool and start decoding.
+    def _install(self, req: Request, slot: int, length: int,
+                 prefill_toks: List[int], cache=None) -> None:
+        """Publish the prefilled slot and start decoding.
+
+        ``cache`` carries a whole-prompt prefill's contiguous cache to
+        scatter into the pool; ``None`` means the unified serve step
+        already wrote the KV straight into the slot's pages (the chunked
+        path) and only the depth needs committing.
 
         A fresh ``n > 1`` request expands here: the prefilled slot becomes
         sample 0, and every other sample forks it copy-on-write (sharing
@@ -353,7 +376,10 @@ class ContinuousScheduler:
         sample is requeued as an independent request instead — its
         counter-based stream makes the tokens identical either way, only
         the prefill sharing is lost."""
-        self.pool.write_prefill(slot, cache, length)
+        if cache is not None:
+            self.pool.write_prefill(slot, cache, length)
+        else:
+            self.pool.commit_prefill(slot, length)
         sp = req.sampling
         if req.out or req.parent is not None or sp is None or sp.n == 1:
             self._install_single(req, slot, prefill_toks[0])
@@ -376,7 +402,8 @@ class ContinuousScheduler:
             self.queue.appendleft(child)
 
     def _admit_whole(self, req: Request) -> None:
-        """Old path: the entire (bucket-padded) prompt in one prefill call."""
+        """Whole-prompt path: the entire (bucket-padded) prompt in one
+        prefill call, scattered into the pool at install."""
         toks_full = self._prefill_tokens(req)
         s = len(toks_full)
         slot = self._alloc_slot(req, s)
@@ -386,53 +413,44 @@ class ContinuousScheduler:
         toks[0, :s] = toks_full
         first, cache = self.engine.prefill_request(
             toks, s, req.task_id, sample=self._first_sample_spec(req))
-        self._install(req, slot, cache, s, first)
+        self._install(req, slot, s, first, cache=cache)
 
     def _start_chunked(self, req: Request) -> None:
-        toks_full = self._prefill_tokens(req)
-        s = len(toks_full)
-        slot = self._alloc_slot(req, s)
+        """Claim a slot + prompt pages; the chunks themselves ride the
+        unified serve step, one ragged row per tick — no device call here,
+        no temp cache, no bucket padding (the static chunk width is the
+        only prefill compilation)."""
+        toks = self._prefill_tokens(req)
+        slot = self._alloc_slot(req, len(toks))
         assert slot is not None
-        bucket = self._bucket(s)
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :s] = toks_full
-        chunk = min(self.cfg.prefill_chunk, bucket)
-        if self.paged:
-            bs = self.pool.block_size
-            alloc = -(-max(bucket, bs) // bs) * bs
-        else:
-            alloc = bucket
-        self._prefilling = _Prefill(
-            req=req, slot=slot, toks=toks, length=s, chunk=chunk,
-            cache=self.engine.new_chunk_cache(alloc))
+        self.slot_temps[slot] = 0.0     # draws armed on the final chunk only
+        self._prefilling = _Prefill(req=req, slot=slot,
+                                    toks=np.asarray(toks, np.int32),
+                                    length=len(toks))
 
-    def _advance_chunk(self) -> None:
-        """Run one prompt chunk of the in-flight prefill; install when the
-        chunk containing the last real token completes."""
-        pf = self._prefilling
-        lo = pf.done
-        hi = min(lo + pf.chunk, pf.toks.shape[1])
-        last = pf.length - 1
-        final = hi > last   # this chunk holds the prompt's last real token
-        last_pos = (last - lo) if lo <= last < hi else (hi - lo - 1)
-        first, pf.cache = self.engine.prefill_chunk(
-            pf.toks[:, lo:hi], lo, pf.cache, pf.req.task_id, last_pos,
-            sample=self._first_sample_spec(pf.req) if final else None)
-        pf.done = hi
-        self.prefill_chunks_run += 1
-        if final:
-            self._prefilling = None
-            self._install(pf.req, pf.slot, pf.cache, pf.length, first)
+    def _arm_first_draw(self, req: Request, slot: int) -> None:
+        """Point the slot's sampling vectors at the request's token-0 draw
+        so the final prefill chunk's logits are sampled inside the same
+        serve_step call (fresh stochastic singles). Recomputes and greedy
+        requests stay on the exact-argmax path."""
+        sp = req.sampling
+        if sp is not None and not req.out and not sp.greedy:
+            self.slot_temps[slot] = sp.temperature
+            self.slot_topk[slot] = sp.top_k
+            self.slot_topp[slot] = sp.top_p
+        else:
+            self.slot_temps[slot] = 0.0
+        self.slot_keys[slot] = self._base_key(req)
+        self.slot_steps[slot] = 0
 
     def _admission_tick(self) -> None:
         if self.cfg.prefill_chunk > 0:
-            # at most one chunk of prefill work per tick: decode steps run
-            # between chunks, so long prompts never stall running requests
+            # starting a chunked prefill is pure host bookkeeping; at most
+            # one chunk per tick then rides the single serve_step call, so
+            # long prompts never stall running requests OR cost a dispatch
             if self._prefilling is None and self.queue \
                     and self._can_admit(self.queue[0]):
                 self._start_chunked(self.queue.popleft())
-            if self._prefilling is not None:
-                self._advance_chunk()
             return
         lim = self.cfg.admit_per_step or self.cfg.num_slots
         admitted = 0
@@ -459,6 +477,7 @@ class ContinuousScheduler:
         pf = self._prefilling
         self._prefilling = None
         self.pool.free(pf.slot)
+        self.slot_temps[pf.slot] = 0.0
         pf.req.state, pf.req.slot = QUEUED, -1
         self.queue.appendleft(pf.req)
         self.preemptions += 1
@@ -500,20 +519,100 @@ class ContinuousScheduler:
 
     # ------------------------------------------------------------------
     def step(self) -> None:
-        """Admit/advance prefill work, then run one mixed decode step over
-        every occupied slot."""
+        """One scheduler tick. Paged: ONE jitted serve_step call over the
+        packed ragged batch of decode tokens + the in-flight prefill
+        chunk. Slots: whole-prompt admission then a separate mixed decode
+        call (the comparison layout)."""
+        if self.paged:
+            self._paged_tick()
+        else:
+            self._slots_tick()
+        self.clock += 1
+        self.ticks += 1
+
+    def _paged_tick(self) -> None:
+        """The unified single-dispatch tick: pack the batch's real tokens
+        into one flat list (decode rows, then the prefill chunk) — padding
+        never exceeds the static packed width, so a tick costs the tokens
+        it actually advances, not ``num_slots × chunk``."""
+        self._admission_tick()
+        if self.running:
+            self._ensure_pages()    # may preempt rows / abort the prefill
+        pf = self._prefilling
+        if not self.running and pf is None:
+            return
+        ns, qw = self.cfg.num_slots, self._qw
+        # two static packed widths (decode-only ticks cost exactly the old
+        # decode call; chunk ticks add qw - 1, the chunking slot not being
+        # a decode row) x serve_step's greedy/sampled traces = at most four
+        # compilations over a scheduler's lifetime
+        T = ns - 1 + qw if pf is not None else ns
+        tokens = np.zeros((T, 1), np.int32)
+        token_rows = np.zeros(T, np.int32)
+        token_pos = np.full(T, -1, np.int32)     # -1 = dead padding token
+        logit_idx = np.zeros(ns, np.int32)
+        t = 0
+        for slot, req in self.running.items():
+            tokens[t, 0] = self.slot_tokens[slot, 0]
+            token_rows[t] = slot
+            token_pos[t] = self.pool.cur_len[slot]
+            logit_idx[slot] = t
+            self.slot_steps[slot] = len(req.out)
+            t += 1
+        hi = 0
+        pf_final = False
+        if pf is not None:
+            lo = pf.done
+            hi = min(lo + qw, pf.length)
+            n = hi - lo
+            tokens[t:t + n, 0] = pf.toks[lo:hi]
+            token_rows[t:t + n] = pf.slot
+            token_pos[t:t + n] = np.arange(lo, hi)
+            pf_final = hi >= pf.length
+            if pf_final:
+                logit_idx[pf.slot] = t + n - 1   # the prompt's last token
+                self._arm_first_draw(pf.req, pf.slot)
+        sample = (self.slot_temps, self.slot_topk, self.slot_topp,
+                  self.slot_keys, self.slot_steps)
+        toks, logits, cache = self.engine.serve_step(
+            tokens, token_rows, token_pos, logit_idx, self.pool.cache,
+            self.pool.block_tables, self.pool.task_id[token_rows], sample)
+        self.pool.cache = cache
+        active = list(self.running.items())
+        if active:
+            self.pool.advance([s for s, _ in active])
+            self.steps_decoded += 1
+            for slot, req in active:
+                tok = int(toks[slot])
+                self.slot_tokens[slot, 0] = tok
+                if self._emit(req, tok):
+                    self._finish(req)
+        if pf is not None:
+            pf.done = hi
+            self.prefill_chunks_run += 1
+            if pf_final:
+                self._prefilling = None
+                spec = self._first_sample_spec(pf.req)
+                if spec is not None and len(spec[0]) > 1:
+                    # fresh n>1 parent: every sample's token 0 comes from
+                    # this one prefill row, each under its own stream (the
+                    # only second dispatch, and only on n>1 installs)
+                    first = self.engine.sample_first(logits[pf.slot], spec)
+                else:
+                    # singles drew (or argmax'd) inside serve_step itself
+                    first = [int(toks[pf.slot])]
+                self._install(pf.req, pf.slot, pf.length, first)
+        self.peak_running = max(self.peak_running, len(self.running))
+
+    def _slots_tick(self) -> None:
+        """The contiguous-layout tick: bucketed whole-prompt admission,
+        then one mixed decode call over all occupied slots."""
         self._admission_tick()
         if self.running:
             sample = self._decode_sample_spec()
-            if self.paged:
-                self._ensure_pages()
-                toks, cache = self.engine.decode_paged(
-                    self.slot_tokens, self.pool.cur_len, self.pool.cache,
-                    self.pool.block_tables, self.pool.task_id, sample=sample)
-            else:
-                toks, cache = self.engine.decode_mixed(
-                    self.slot_tokens, self.pool.cur_len, self.pool.cache,
-                    self.pool.task_id, sample=sample)
+            toks, cache = self.engine.decode_mixed(
+                self.slot_tokens, self.pool.cur_len, self.pool.cache,
+                self.pool.task_id, sample=sample)
             self.pool.cache = cache
             active = list(self.running.items())
             self.peak_running = max(self.peak_running, len(active))
@@ -524,7 +623,6 @@ class ContinuousScheduler:
                 self.slot_tokens[slot, 0] = tok
                 if self._emit(req, tok):
                     self._finish(req)
-        self.clock += 1
 
     def run(self) -> Dict[int, Request]:
         """Drain everything currently submitted."""

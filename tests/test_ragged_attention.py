@@ -1,0 +1,329 @@
+"""Unified ragged prefill+decode: kernel parity and the one-call tick.
+
+Contracts under test:
+
+* the Pallas ``ragged_paged_attention_kernel`` matches the pure-jnp
+  ``ragged_paged_attention_ref`` oracle in interpret mode across every
+  batch composition a scheduler tick can pack — decode-only, prefill-only,
+  mixed, dead padding tokens, chunks straddling page boundaries;
+* the XLA fallback (``layers.ragged_paged_attention_decode``) obeys the
+  same oracle, and collapses to the paged decode computation per token;
+* ``model.mixed_step`` with decode tokens is BITWISE the paged
+  ``decode_step``, and a chunked ragged prefill reproduces the
+  whole-prompt prefill logits;
+* a scheduler tick with both a prefill chunk and decode rows in flight
+  issues exactly ONE jitted device call, and the unified tick's token
+  streams are identical to the whole-prompt two-call path and to static
+  per-request decode.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aot as A
+from repro.kernels import ref as R
+from repro.kernels.decode_attention import ragged_paged_attention_kernel
+from repro.models.layers import ragged_paged_attention_decode
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.scheduler import (ContinuousScheduler, Request,
+                                   SchedulerConfig)
+
+
+def _tables_for(rng, ns, bs, nb, depths):
+    """Non-overlapping random page assignment covering each slot's depth."""
+    npages = max(1, max(-(-int(d) // bs) for d in depths))
+    bt = np.zeros((ns, npages), np.int32)
+    avail = list(rng.permutation(np.arange(1, nb)))
+    for i in range(ns):
+        for j in range(-(-int(depths[i]) // bs)):
+            bt[i, j] = avail.pop()
+    return jnp.asarray(bt)
+
+
+# every composition a tick can pack: (token_rows, token_pos) over 4 slots
+# (a token at pos p attends to its slot's kv [0, p]; -1 = dead padding)
+COMPOSITIONS = {
+    "decode_only": ([0, 1, 2, 3], [13, 5, 0, 26]),
+    "prefill_only": ([1, 1, 1, 1, 1, 1], [0, 1, 2, 3, 4, 5]),
+    "mixed": ([0, 2, 1, 1, 1, 1, 3], [13, 3, 5, 6, 7, 8, 0]),
+    "dead_tokens": ([1, 0, 0, 0], [9, -1, -1, -1]),
+    "straddle_pages": ([0, 2, 2, 2, 2, 2, 2, 3], [7, 5, 6, 7, 8, 9, 10, 30]),
+}
+
+
+@pytest.mark.parametrize("comp", sorted(COMPOSITIONS))
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ragged_kernel_matches_oracle(rng, comp, dtype):
+    rows, pos = COMPOSITIONS[comp]
+    ns, h, kvh, hd, bs, nb = 4, 4, 2, 16, 8, 40
+    T = len(rows)
+    t = lambda *sh: jnp.asarray(rng.normal(size=sh), dtype)
+    q, kp, vp = t(T, h, hd), t(nb, bs, kvh, hd), t(nb, bs, kvh, hd)
+    rows_j = jnp.asarray(rows, jnp.int32)
+    pos_j = jnp.asarray(pos, jnp.int32)
+    depths = np.zeros(ns, np.int64)
+    for r, p in zip(rows, pos):
+        depths[r] = max(depths[r], p + 1)
+    bt = _tables_for(rng, ns, bs, nb, depths)
+    ref = R.ragged_paged_attention_ref(
+        q.astype(jnp.float32), kp.astype(jnp.float32),
+        vp.astype(jnp.float32), bt, rows_j, pos_j)
+    out = ragged_paged_attention_kernel(q, kp, vp, bt, rows_j, pos_j,
+                                        interpret=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out, np.float32),
+                               atol=tol, rtol=tol,
+                               err_msg=f"ragged kernel diverged ({comp})")
+    dead = np.asarray(pos) < 0
+    assert np.all(np.asarray(out)[dead] == 0), "dead tokens must be zeros"
+
+
+def test_ragged_xla_fallback_matches_oracle(rng):
+    ns, h, kvh, hd, bs, nb = 4, 4, 2, 16, 8, 40
+    rows = [0, 1, 1, 1, 2, 0]
+    pos = [17, 3, 4, 5, 11, -1]
+    T = len(rows)
+    t = lambda *sh: jnp.asarray(rng.normal(size=sh), jnp.float32)
+    q, kp, vp = t(T, 1, h, hd), t(nb, bs, kvh, hd), t(nb, bs, kvh, hd)
+    rows_j, pos_j = jnp.asarray(rows, jnp.int32), jnp.asarray(pos, jnp.int32)
+    depths = np.zeros(ns, np.int64)
+    for r, p in zip(rows, pos):
+        depths[r] = max(depths[r], p + 1)
+    bt = _tables_for(rng, ns, bs, nb, depths)
+    ref = R.ragged_paged_attention_ref(q[:, 0], kp, vp, bt, rows_j, pos_j)
+    out = ragged_paged_attention_decode(q, kp, vp, bt, rows_j, pos_j)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out[:, 0]),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_ragged_decode_token_equals_paged_decode(rng):
+    """A decode token (one per slot, pos = depth - 1) reproduces the paged
+    flash-decode oracle at cur_len = pos + 1 — the ragged kernel strictly
+    generalizes the paged decode contract."""
+    ns, h, kvh, hd, bs, nb = 3, 4, 2, 16, 8, 24
+    t = lambda *sh: jnp.asarray(rng.normal(size=sh), jnp.float32)
+    q, kp, vp = t(ns, h, hd), t(nb, bs, kvh, hd), t(nb, bs, kvh, hd)
+    pos = jnp.asarray([14, 7, 0], jnp.int32)
+    rows = jnp.arange(ns, dtype=jnp.int32)
+    bt = _tables_for(rng, ns, bs, nb, np.asarray(pos) + 1)
+    ragged = R.ragged_paged_attention_ref(q, kp, vp, bt, rows, pos)
+    paged = R.paged_decode_attention_ref(q, kp, vp, bt, pos + 1)
+    np.testing.assert_allclose(np.asarray(ragged), np.asarray(paged),
+                               atol=1e-6, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# model.mixed_step parity
+# ---------------------------------------------------------------------------
+
+def _paged_from_contiguous(rng, model, cache, depths, bs_page, nblocks,
+                           max_len=16):
+    """Scatter a contiguous prefill cache into scrambled pool pages."""
+    b = len(depths)
+    npages = max_len // bs_page
+    bt = np.zeros((b, npages), np.int32)
+    avail = list(rng.permutation(np.arange(1, nblocks)))
+    paged = model.init_paged_cache(nblocks, bs_page)
+    for i in range(b):
+        for j in range(-(-int(depths[i]) // bs_page)):
+            bt[i, j] = avail.pop()
+    for gi in range(len(paged)):
+        for u in paged[gi]:
+            for nm in ("k", "v"):
+                pool = np.array(paged[gi][u][nm])
+                src = np.asarray(cache[gi][u][nm])
+                for i in range(b):
+                    for j in range(-(-int(depths[i]) // bs_page)):
+                        lo = j * bs_page
+                        hi = min(lo + bs_page, int(depths[i]))
+                        pool[:, bt[i, j], :hi - lo] = src[:, i, lo:hi]
+                paged[gi][u][nm] = jnp.asarray(pool)
+    return paged, jnp.asarray(bt)
+
+
+def test_mixed_step_decode_tokens_bitwise_decode_step(rng, tiny_lm):
+    """Decode-token mixed_step logits == paged decode_step logits, bitwise."""
+    cfg, model, params = tiny_lm
+    b, s, bs_page, nblocks = 3, 8, 4, 14
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    _, cache, _ = model.prefill(params, {"tokens": toks}, max_len=16)
+    depths = np.asarray([8, 5, 2], np.int32)
+    paged, bt = _paged_from_contiguous(rng, model, cache, depths, bs_page,
+                                       nblocks)
+    step_tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, 1)), jnp.int32)
+    pos = jnp.asarray(depths)
+    lg_dec, _ = model.decode_step(params, step_tok, pos, paged,
+                                  block_tables=bt)
+    lg_mix, _ = model.mixed_step(params, step_tok,
+                                 jnp.arange(b, dtype=jnp.int32), pos, paged,
+                                 block_tables=bt,
+                                 logit_idx=jnp.arange(b, dtype=jnp.int32))
+    np.testing.assert_array_equal(np.asarray(lg_dec[:, -1]),
+                                  np.asarray(lg_mix))
+
+
+def test_mixed_step_chunked_prefill_matches_whole_prefill(rng, tiny_lm):
+    """Streaming a prompt through mixed_step in packed chunks (including a
+    page-straddling final chunk) reproduces the whole-prompt prefill's
+    last-token logits."""
+    cfg, model, params = tiny_lm
+    bs_page, nblocks, qw, plen = 4, 14, 8, 11
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, plen)), jnp.int32)
+    lg_full, _, _ = model.prefill(params, {"tokens": prompt}, max_len=16)
+    paged = model.init_paged_cache(nblocks, bs_page)
+    npages = -(-plen // bs_page)
+    bt = np.zeros((1, 16 // bs_page), np.int32)
+    bt[0, :npages] = 1 + rng.permutation(npages)
+    btj = jnp.asarray(bt)
+    lg = None
+    for lo in range(0, plen, qw):
+        n = min(lo + qw, plen) - lo
+        tk = np.zeros((qw, 1), np.int32)
+        tk[:n, 0] = np.asarray(prompt)[0, lo:lo + n]
+        pos = np.full(qw, -1, np.int32)
+        pos[:n] = np.arange(lo, lo + n)
+        lg, paged = model.mixed_step(
+            params, jnp.asarray(tk), jnp.zeros(qw, jnp.int32),
+            jnp.asarray(pos), paged, block_tables=btj,
+            logit_idx=jnp.asarray([n - 1], jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg_full[0, -1]), np.asarray(lg[0]),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_mixed_step_pallas_matches_xla(rng, tiny_lm):
+    """attn_impl='pallas' (ragged kernel, interpret on CPU) and the XLA
+    gather fallback agree on a genuinely mixed packed batch."""
+    from repro.models.model import Model, ModelOptions
+    cfg, model, params = tiny_lm
+    pmodel = Model(cfg, ModelOptions(chunk_q=8, chunk_kv=8,
+                                     attn_impl="pallas"))
+    b, s, bs_page, nblocks = 3, 8, 4, 20
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    _, cache, _ = model.prefill(params, {"tokens": toks}, max_len=16)
+    depths = np.asarray([8, 4, 6], np.int32)
+    paged, bt = _paged_from_contiguous(rng, model, cache, depths, bs_page,
+                                       nblocks)
+    # slot 0 decodes at depth 8; slot 1 runs a 4-token chunk on top of 4
+    # resident; slot 2 idles; one dead padding token rides along
+    tokens = np.zeros((6, 1), np.int32)
+    tokens[:5, 0] = rng.integers(0, cfg.vocab_size, 5)
+    rows = jnp.asarray([0, 1, 1, 1, 1, 0], jnp.int32)
+    pos = jnp.asarray([8, 4, 5, 6, 7, -1], jnp.int32)
+    lidx = jnp.asarray([0, 4, 0], jnp.int32)
+    args = (params, jnp.asarray(tokens), rows, pos, paged)
+    lg_x, _ = model.mixed_step(*args, block_tables=bt, logit_idx=lidx)
+    lg_p, _ = pmodel.mixed_step(*args, block_tables=bt, logit_idx=lidx)
+    np.testing.assert_allclose(np.asarray(lg_x), np.asarray(lg_p),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: the one-call tick
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mt_engine(tiny_lm):
+    cfg, model, params = tiny_lm
+    tasks = [A.random_fused(cfg, params["embed"]["tok"], seed=s)
+             for s in range(3)]
+    return cfg, ServeEngine(model, params, ServeConfig(max_len=48),
+                            fused_tasks=tasks)
+
+
+def test_unified_tick_is_one_dispatch(rng, mt_engine):
+    """ACCEPTANCE: a tick with BOTH a prefill chunk and decode rows in
+    flight costs exactly one jitted device call."""
+    cfg, eng = mt_engine
+    sched = ContinuousScheduler(eng, SchedulerConfig(
+        num_slots=4, bucket_min=8, kv_layout="paged", block_size=8,
+        prefill_chunk=8))
+    short = Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, 4)
+                    .astype(np.int32), task_id=0, max_new_tokens=12)
+    long = Request(rid=1, prompt=rng.integers(0, cfg.vocab_size, 30)
+                   .astype(np.int32), task_id=1, max_new_tokens=4)
+    sched.submit(short)
+    sched.step()                # short's whole prompt is one chunk
+    sched.submit(long)
+    sched.step()                # long starts chunking; short decodes
+    assert sched._prefilling is not None and sched.running, (
+        "setup failed: need a chunk and decode rows in the same tick")
+    mixed_ticks = 0
+    while sched._prefilling is not None and sched.running:
+        before = eng.dispatches
+        sched.step()
+        assert eng.dispatches - before == 1, (
+            "a mixed prefill-chunk + decode tick must be ONE device call")
+        mixed_ticks += 1
+    assert mixed_ticks >= 2, "workload never mixed chunk and decode work"
+    sched.run()
+    sched.pool.check_no_leaks()
+    # and the streams stayed exact
+    for req in (short, long):
+        ref = eng.generate(req.prompt[None], req.max_new_tokens,
+                           np.asarray([req.task_id], np.int32))[0]
+        np.testing.assert_array_equal(np.asarray(req.out), ref)
+
+
+def test_decode_only_tick_is_one_dispatch(rng, mt_engine):
+    cfg, eng = mt_engine
+    sched = ContinuousScheduler(eng, SchedulerConfig(
+        num_slots=3, bucket_min=8, kv_layout="paged", block_size=8,
+        prefill_chunk=8))
+    for i in range(2):
+        sched.submit(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+            task_id=i, max_new_tokens=6))
+    while sched.queue or sched._prefilling is not None:
+        sched.step()
+    before = eng.dispatches
+    sched.step()                # pure decode tick
+    assert eng.dispatches - before == 1
+    sched.run()
+
+
+def test_unified_vs_whole_prompt_token_parity(rng, mt_engine):
+    """The unified chunked tick and the whole-prompt (separate prefill
+    dispatch) paged path produce identical token streams — the old
+    two-call tick's outputs survive the merge."""
+    cfg, eng = mt_engine
+
+    def mk():
+        rr = np.random.default_rng(11)
+        return [Request(
+            rid=i,
+            prompt=rr.integers(0, cfg.vocab_size,
+                               int(rr.integers(3, 17))).astype(np.int32),
+            task_id=int(rr.integers(0, 3)),
+            max_new_tokens=int(rr.integers(1, 9))) for i in range(6)]
+
+    outs = []
+    for kw in (dict(prefill_chunk=8), dict()):
+        reqs = mk()
+        sched = ContinuousScheduler(eng, SchedulerConfig(
+            num_slots=3, bucket_min=8, kv_layout="paged", block_size=8, **kw))
+        for r in reqs:
+            sched.submit(r)
+        sched.run()
+        sched.pool.check_no_leaks()
+        outs.append([r.out for r in reqs])
+    assert outs[0] == outs[1], (
+        "unified chunked tick diverged from whole-prompt admission")
+
+
+def test_chunked_prefill_no_temp_cache_copies(rng, mt_engine):
+    """The chunked path must not route through write_prefill (the install
+    copy) — chunk KV lands in the pool pages directly."""
+    cfg, eng = mt_engine
+    sched = ContinuousScheduler(eng, SchedulerConfig(
+        num_slots=2, bucket_min=8, kv_layout="paged", block_size=8,
+        prefill_chunk=8))
+    calls = []
+    orig = sched.pool.write_prefill
+    sched.pool.write_prefill = lambda *a, **k: (calls.append(1), orig(*a, **k))
+    sched.submit(Request(
+        rid=0, prompt=rng.integers(0, cfg.vocab_size, 20).astype(np.int32),
+        task_id=0, max_new_tokens=3))
+    sched.run()
+    assert not calls, "chunked prefill still copies through write_prefill"
+    assert sched.prefill_chunks_run == 3    # 20 tokens / 8-chunk = 3 chunks
