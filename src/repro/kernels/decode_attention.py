@@ -22,15 +22,16 @@ actually mapped.
 
 ``ragged_paged_attention_kernel`` generalizes the paged kernel to RAGGED
 per-slot query lengths: the batch is a PACKED token list — decode rows
-contribute one token each, the in-flight prefill-chunk row up to the chunk
-width, free slots zero — and every token carries its owning slot
-(``token_rows``) and absolute position (``token_pos``). Both vectors are
-scalar-prefetched next to the block tables, so one launch serves a mixed
-prefill-chunk + decode batch (the single-device-call scheduler tick) with
-zero padding compute: chunk tokens see kv ``<= token_pos`` through their
-slot's table slice (causal within the chunk, since the chunk's KV is
-scattered before the launch), and dead padding tokens (``token_pos < 0``)
-skip every page and output exact zeros.
+contribute one token each, every in-flight prefill a chunk of its prompt
+(several prompts' chunks pack into one launch), free slots zero — and
+every token carries its owning slot (``token_rows``) and absolute
+position (``token_pos``). Both vectors are scalar-prefetched next to the
+block tables, so one launch serves a mixed multi-chunk + decode batch
+(the single-device-call scheduler tick) with zero padding compute: chunk
+tokens see kv ``<= token_pos`` through their OWN slot's table slice
+(causal within a chunk, since chunk KV is scattered before the launch;
+blind to other slots' chunks by construction), and dead padding tokens
+(``token_pos < 0``) skip every page and output exact zeros.
 """
 from __future__ import annotations
 
@@ -286,10 +287,10 @@ def ragged_paged_attention_kernel(q, k_pages, v_pages, block_tables,
                                   token_rows, token_pos, *, sm_scale=None,
                                   interpret=False):
     """Ragged flash attention over a paged KV pool: one launch, one PACKED
-    token list mixing prefill-chunk and decode work.
+    token list mixing any number of prefill chunks with decode work.
 
     q: (T, h, hd) — the tick's real tokens, packed: each decode row
-    contributes one token, the in-flight prefill row its chunk, free slots
+    contributes one token, every in-flight prefill its chunk, free slots
     nothing. k_pages / v_pages: (num_blocks, block_size, kvh, hd) with this
     step's new KV already scattered in; block_tables: (num_slots, npages)
     int32; token_rows: (T,) int32 — each token's owning slot; token_pos:
@@ -298,9 +299,9 @@ def ragged_paged_attention_kernel(q, k_pages, v_pages, block_tables,
     ``token_rows``/``token_pos`` are scalar-prefetched next to the block
     tables: each token's BlockSpec index_map dereferences ITS SLOT's table
     slice, attends over kv positions ``<= token_pos`` (causal within a
-    chunk — lower-positioned chunk-mates were scattered before the launch),
-    and never streams pages past its position. Dead tokens skip every page
-    and produce exact zeros.
+    chunk — lower-positioned chunk-mates were scattered before the launch —
+    and blind to every other slot's chunk), and never streams pages past
+    its position. Dead tokens skip every page and produce exact zeros.
     """
     T, h, hd = q.shape
     block_size, kvh = k_pages.shape[1], k_pages.shape[2]

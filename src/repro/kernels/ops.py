@@ -61,8 +61,9 @@ def ragged_paged_attention(q, k_pages, v_pages, block_tables, token_rows,
                            token_pos):
     """q: (T, h, hd) packed tokens; pages: (num_blocks, block_size, kvh,
     hd); block_tables: (num_slots, npages); token_rows/token_pos: (T,).
-    The unified serve-path mixed prefill-chunk + decode attention (one
-    launch per tick, zero padding compute)."""
+    The unified serve-path mixed multi-chunk + decode attention — every
+    in-flight prefill's chunk and all decode rows in one launch per tick,
+    zero padding compute."""
     return ragged_paged_attention_kernel(q, k_pages, v_pages, block_tables,
                                          token_rows, token_pos,
                                          interpret=_interpret())

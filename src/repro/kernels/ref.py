@@ -70,12 +70,13 @@ def ragged_paged_attention_ref(q, k_pages, v_pages, block_tables, token_rows,
     """q: (T, h, hd) packed tokens; pages: (num_blocks, block_size, kvh, hd);
     block_tables: (num_slots, npages) int32; token_rows / token_pos: (T,).
 
-    The packed mixed prefill-chunk + decode contract: token t belongs to
+    The packed mixed multi-chunk + decode contract: token t belongs to
     slot ``token_rows[t]`` at absolute position ``token_pos[t]`` and
     attends causally (kv position <= its own) over its slot's gathered
     pages — which is exactly the contiguous decode oracle per token, after
-    the per-token block-table gather. Dead padding tokens
-    (``token_pos < 0``) output exact zeros.
+    the per-token block-table gather. Any number of slots may contribute
+    chunks to the same packed list; a token never sees another slot's
+    pages. Dead padding tokens (``token_pos < 0``) output exact zeros.
     """
     T, h, hd = q.shape
     bs, kvh = k_pages.shape[1], k_pages.shape[2]

@@ -85,8 +85,13 @@ def main():
                     help="physical KV pages incl. the scratch page "
                          "(0 = capacity parity with --layout slots)")
     ap.add_argument("--prefill-chunk", type=int, default=32,
-                    help="split prompts into chunks of this many tokens, "
-                         "one per decode gap (0 = whole-prompt prefill)")
+                    help="per-tick prefill token budget: prompts stream "
+                         "through the unified serve step in chunks drawn "
+                         "from it (0 = whole-prompt prefill)")
+    ap.add_argument("--max-prefills", type=int, default=4,
+                    help="prompts allowed to chunk concurrently, splitting "
+                         "the per-tick budget shortest-remaining-first "
+                         "(1 = serial prefill admission)")
     samp = ap.add_argument_group("sampling (default: greedy)")
     samp.add_argument("--temperature", type=float, default=0.0,
                       help="0 = greedy argmax; > 0 samples from the scaled "
@@ -191,7 +196,7 @@ def main():
     sched = ContinuousScheduler(eng, SchedulerConfig(
         num_slots=args.slots, kv_layout=args.layout,
         block_size=args.block_size, num_blocks=args.num_blocks,
-        prefill_chunk=args.prefill_chunk))
+        prefill_chunk=args.prefill_chunk, max_prefills=args.max_prefills))
     finished = sched.run_stream(arrivals)
     # a tick is not "one decode step plus maybe one prefill chunk" anymore:
     # the paged path folds chunk + decode rows into ONE device call, so
@@ -208,7 +213,8 @@ def main():
         pool = sched.pool
         print(f"paged pool: {pool.num_blocks - 1} usable pages x "
               f"{pool.block_size} tokens, peak concurrency "
-              f"{sched.peak_running}, {sched.preemptions} preemptions, "
+              f"{sched.peak_running}, peak concurrent prefills "
+              f"{sched.peak_prefills}, {sched.preemptions} preemptions, "
               f"{pool.forks} forks, {pool.cow_copies} COW page copies")
     for rid in sorted(finished):
         req = finished[rid]

@@ -349,8 +349,8 @@ def ragged_paged_attention_decode(q, k_pages, v_pages, block_tables,
                                   token_rows, token_pos, *, softcap=0.0):
     """Packed ragged mixed-batch attention against a paged KV pool (XLA).
 
-    q: (T, 1, H, hd) — the tick's packed tokens (decode rows one each, the
-    prefill-chunk row up to the chunk width, free slots none);
+    q: (T, 1, H, hd) — the tick's packed tokens (decode rows one each,
+    every in-flight prefill its chunk, free slots none);
     k_pages/v_pages: (num_blocks, block_size, KV, hd) with the step's new
     KV already scattered in; block_tables: (num_slots, npages) int32;
     token_rows: (T,) each token's owning slot; token_pos: (T,) its

@@ -275,12 +275,12 @@ class Model:
 
         if cache_u is not None and token_rows is not None and block_tables is not None:
             # ---- unified ragged mixed step: the batch axis is a PACKED
-            # token list (decode rows one token each, the prefill-chunk row
-            # its chunk, zero padding compute). decode_pos carries each
-            # token's absolute position (-1 = dead padding token); its K/V
-            # scatters straight into its slot's mapped pool pages — no temp
-            # cache — and attention runs the ragged kernel over that slot's
-            # resident pages ----
+            # token list (decode rows one token each, every in-flight
+            # prefill its chunk, zero padding compute). decode_pos carries
+            # each token's absolute position (-1 = dead padding token);
+            # its K/V scatters straight into its slot's mapped pool pages
+            # — no temp cache — and attention runs the ragged kernel over
+            # that slot's resident pages ----
             if window:
                 raise NotImplementedError(
                     "paged serving has no sliding-window masking; serve SWA "
@@ -786,20 +786,23 @@ class Model:
         pair.
 
         tokens: (T, 1) — the tick's PACKED token list: each decode row
-        contributes its one fed-back token, the in-flight prefill row its
-        next prompt chunk, free slots nothing (zero padding compute beyond
-        the static T). token_rows: (T,) each token's owning pool slot;
-        token_pos: (T,) its absolute position, ``-1`` marking a dead
-        padding token (outputs zeros, KV lands on the scratch page).
-        Every token's new KV scatters directly into its slot's
-        block-table-mapped pool pages (``init_paged_cache`` layout) and
-        attends causally over that slot's resident kv ``<= token_pos`` —
-        chunk tokens see their lower-positioned chunk-mates because the
-        whole scatter precedes attention. ``logit_idx``: (num_slots,)
-        per-SLOT index into the packed axis whose logits to report (a
-        decode row's token; a final prefill chunk's last prompt token;
-        slots without a report position may point anywhere). Causal
-        attention-only stacks. Returns (logits (num_slots, V), new_cache).
+        contributes its one fed-back token, every in-flight prefill its
+        next prompt chunk (several prompts' chunks pack into one call,
+        each chunk a contiguous span of the list), free slots nothing
+        (zero padding compute beyond the static T). token_rows: (T,) each
+        token's owning pool slot; token_pos: (T,) its absolute position,
+        ``-1`` marking a dead padding token (outputs zeros, KV lands on
+        the scratch page). Every token's new KV scatters directly into
+        its slot's block-table-mapped pool pages (``init_paged_cache``
+        layout) in ONE launch — chunks from different slots land in their
+        own tables' pages — and attends causally over its slot's resident
+        kv ``<= token_pos``: chunk tokens see their lower-positioned
+        chunk-mates because the whole scatter precedes attention, and
+        never another slot's chunk. ``logit_idx``: (num_slots,) per-SLOT
+        index into the packed axis whose logits to report (a decode row's
+        token; a final prefill chunk's last prompt token; slots without a
+        report position may point anywhere). Causal attention-only
+        stacks. Returns (logits (num_slots, V), new_cache).
         """
         cfg = self.cfg
         kinds = {k for plan in self.plan for k in plan.kinds}

@@ -13,8 +13,9 @@ Two serving modes share the same jitted model functions:
   * the continuous path, driven by :mod:`repro.serve.scheduler`. For the
     paged KV pool the whole tick is ONE jitted :meth:`serve_step` call — a
     ragged PACKED token list where each decode row contributes one token
-    and the in-flight prefill row its next chunk (every token tagged with
-    its owning slot and position), each token's KV scatters straight into
+    and every in-flight prefill its next chunk (several prompts chunk
+    concurrently, every token tagged with its owning slot and position),
+    each token's KV scatters straight into
     its slot's block-table-mapped pool pages, and per-slot sampling
     vectors fold the token draw into the same dispatch. The
     contiguous :class:`repro.serve.kv_pool.SlotKVPool` comparison layout
@@ -239,7 +240,7 @@ class ServeEngine:
         regardless of batch composition.
 
         tokens: (T, 1) the tick's packed token list (each decode row one
-        fed-back token, the in-flight prefill row its chunk, free slots
+        fed-back token, every in-flight prefill its chunk, free slots
         nothing); token_rows / token_pos / token_tasks: (T,) each token's
         owning slot, absolute position (-1 = dead padding), and task id;
         logit_idx: (num_slots,) per-slot index into the packed axis whose
@@ -248,7 +249,8 @@ class ServeEngine:
         vectors — always threaded, all-greedy batches take the exact-argmax
         trace. The packed width T is whatever the scheduler builds (one
         compilation per distinct T per greedy/sampled trace — the
-        scheduler's two tick shapes make that at most four).
+        scheduler's two tick shapes make that at most four, however many
+        prefills share the chunk budget).
         Returns (next token per slot (num_slots,) np, per-slot logits
         (num_slots, V) still on device, new pool cache)."""
         temps = np.asarray(sample[0])

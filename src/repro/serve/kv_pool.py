@@ -255,6 +255,15 @@ class PagedKVPool:
     def pages_needed(self, tokens: int) -> int:
         return -(-tokens // self.block_size)
 
+    def can_claim(self, npages: int, reserve: int = 0) -> bool:
+        """True when ``npages`` pages can be claimed while leaving at least
+        ``reserve`` pages free. Admission paths that hold pages for many
+        ticks before producing anything (chunked prefill) pass a reserve
+        of one append page per running decode row, so claiming a prompt's
+        pages can never starve the decode batch into preempting or
+        aborting on its very next page-crossing."""
+        return len(self._free_blocks) >= npages + reserve
+
     def occupied(self) -> List[int]:
         return sorted(self._used_slots)
 

@@ -104,13 +104,18 @@ def masked_logits(logits, temps, top_ks, top_ps):
     one fused computation — no python branching on traced values.
 
     Both filters keep a *prefix* of the descending-sorted row, so the kept
-    set is fully described by one per-row cutoff VALUE: sort values once,
-    find the smallest kept logit, and compare the unsorted row against it.
-    That replaces the old argsort → mask → inverse-argsort scatter (two
-    O(V log V) index sorts plus two gathers) with a single value sort —
-    the decode-path cost that made sampled serving drag behind greedy.
-    (Exact ties at the cutoff are all kept, where rank-order masking would
-    keep only enough to fill k — indistinguishable for real-model logits.)
+    set is fully described by one per-row cutoff VALUE plus a tie budget:
+    sort values once, find the smallest kept logit, and compare the
+    unsorted row against it. That replaces the old argsort → mask →
+    inverse-argsort scatter (two O(V log V) index sorts plus two gathers)
+    with a single value sort and one O(V) cumsum — the decode-path cost
+    that made sampled serving drag behind greedy.
+
+    Ties at the cutoff value break deterministically in index order
+    (lowest vocab id first), matching a stable argsort oracle exactly: if
+    the k-th value is duplicated, only enough of the tied tokens survive
+    to fill the kept-prefix length — never all of them. Without the tie
+    budget, a row of duplicated logits could keep far more than k tokens.
     """
     logits = logits.astype(jnp.float32)
     V = logits.shape[-1]
@@ -125,10 +130,16 @@ def masked_logits(logits, temps, top_ks, top_ps):
     # to 1.0 before the tail, which would spuriously mask the last tokens
     keep &= (mass_before < top_ps[:, None]) | (top_ps[:, None] >= 1.0)
     keep = keep.at[:, 0].set(True)                      # never mask rank 0
-    n_keep = keep.sum(axis=-1)                          # kept set is a prefix
-    cutoff = jnp.take_along_axis(sorted_desc, (n_keep - 1)[:, None], axis=-1)
+    n_keep = keep.sum(axis=-1)[:, None]                 # kept set is a prefix
+    cutoff = jnp.take_along_axis(sorted_desc, n_keep - 1, axis=-1)
+    above = scaled > cutoff
+    # tokens tied at the cutoff fill the remaining budget in index order
+    # (a stable argsort ranks equal values lowest-index-first)
+    tie = scaled == cutoff
+    tie_budget = n_keep - above.sum(axis=-1, keepdims=True)
+    tie_rank = jnp.cumsum(tie, axis=-1) - 1             # index-order rank
     neg = jnp.finfo(jnp.float32).min
-    return jnp.where(scaled >= cutoff, scaled, neg)
+    return jnp.where(above | (tie & (tie_rank < tie_budget)), scaled, neg)
 
 
 def step_keys(base_keys, steps):

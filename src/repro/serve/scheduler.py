@@ -14,24 +14,31 @@ Two KV layouts share the same request lifecycle:
     in flight and ``num_slots`` can far exceed what ``num_slots * max_len``
     contiguous regions would cost. A tick is ONE jitted
     ``ServeEngine.serve_step`` call over a RAGGED, PACKED token list:
-    every decode row contributes its one fed-back token, the in-flight
-    prefill row its next prompt chunk (each token tagged with its owning
-    slot and absolute position), free slots nothing — prefill-chunk KV
-    scatters straight into pool pages, so there is no per-request temp
-    cache and no install copy, and padding never exceeds the static
-    packed width. When the pool runs out of pages mid-decode the newest
-    request is preempted (freed + requeued) and later *recomputed* —
-    greedy decode makes the recompute token-for-token identical.
+    every decode row contributes its one fed-back token, each of up to
+    ``max_prefills`` in-flight prefills its next prompt chunk (each token
+    tagged with its owning slot and absolute position), free slots
+    nothing — chunk KV scatters straight into pool pages, so there is no
+    per-request temp cache and no install copy, and padding never exceeds
+    the static packed width. The per-tick chunk budget
+    (``prefill_chunk`` tokens) is split across the in-flight prefills
+    shortest-remaining-first — short prompts clear the queue fast
+    instead of waiting behind a long one — with the oldest prefill
+    guaranteed a ``budget / max_prefills`` slice so a stream of short
+    prompts can never starve it. When the pool runs out of pages
+    mid-decode the newest request is preempted (freed + requeued) and
+    later *recomputed* — greedy decode makes the recompute
+    token-for-token identical.
   * ``kv_layout="slots"``: the contiguous :class:`SlotKVPool` — one
     ``max_len`` region per slot, whole-prompt bucket prefills plus a
     separate mixed decode call (kept for comparison benchmarks).
 
 Whole-prompt prefill is bucket-padded (one compilation per bucket). With
 ``prefill_chunk > 0`` (paged only) prompts instead stream through the
-unified step in fixed-size chunks, one per tick, at the static chunk
-width — decode rows advance in the SAME device call, so a long prompt
-neither stalls running requests (head-of-line blocking) nor costs a
-second dispatch.
+unified step in chunks drawn from a fixed per-tick token budget shared
+by up to ``max_prefills`` concurrent prefills — decode rows advance in
+the SAME device call, so a long prompt neither stalls running requests
+(head-of-line blocking) nor delays *queued* prompts behind it, and no
+batch composition ever costs a second dispatch.
 
 Because the AoT bias is a per-(task, token) gather from the fused tables
 (paper Eq. 1), the mixed-task batch costs exactly what a single-task batch
@@ -110,23 +117,33 @@ class SchedulerConfig:
     block_size: int = 16                # KV page size in tokens (paged)
     num_blocks: int = 0                 # physical pages incl. scratch page 0
                                         # (0 = capacity parity with slots)
-    prefill_chunk: int = 0              # split prompts into chunks of this
-                                        # many tokens, one per tick, ridden
-                                        # by the unified ragged serve step
+    prefill_chunk: int = 0              # per-tick prefill TOKEN BUDGET:
+                                        # prompts stream through the unified
+                                        # ragged serve step in chunks, the
+                                        # budget split across in-flight
+                                        # prefills shortest-remaining-first
                                         # (paged only; 0 = whole-prompt)
+    max_prefills: int = 4               # cap on concurrently chunking
+                                        # prefills sharing that budget
 
 
 @dataclass
 class _Prefill:
     """A chunked prefill in flight: the request holds its slot (and pages)
     while its prompt streams through the unified serve step chunk-by-chunk
-    — each chunk is just a ragged row of the tick's single device call,
-    scattering its KV straight into the slot's mapped pool pages."""
+    — each chunk is just a ragged span of the tick's single device call,
+    scattering its KV straight into the slot's mapped pool pages. Several
+    prefills chunk concurrently, splitting the tick's token budget
+    shortest-remaining-first."""
     req: Request
     slot: int
     toks: np.ndarray                    # (s,) the tokens to prefill
     length: int                         # == len(toks): prompt [+ recompute]
     done: int = 0                       # tokens processed so far
+
+    @property
+    def remaining(self) -> int:
+        return self.length - self.done
 
 
 class ContinuousScheduler:
@@ -162,6 +179,7 @@ class ContinuousScheduler:
         assert not (cfg.prefill_chunk > 0 and cfg.kv_layout == "slots"), (
             "chunked prefill rides the unified paged serve step; "
             "kv_layout='slots' serves whole-prompt prefills only")
+        assert cfg.max_prefills >= 1, cfg.max_prefills
         self.engine = engine
         self.cfg = cfg
         self.max_len = engine.cfg.max_len
@@ -190,12 +208,16 @@ class ContinuousScheduler:
         self.preemptions = 0
         self.prefill_chunks_run = 0
         self.peak_running = 0
-        self._prefilling: Optional[_Prefill] = None
+        self.peak_prefills = 0
+        # chunked prefills in flight, admission order (newest last — the
+        # abort victim ordering); several share the per-tick token budget
+        self._prefills: List[_Prefill] = []
         self._admit_seq: Dict[int, int] = {}         # slot -> admission order
         self._seq = 0
-        # static chunk width of the unified serve step's packed token
-        # list: ticks compile to exactly two shapes (decode-only, and
-        # decode + a chunk of up to _qw tokens)
+        # static per-tick prefill token budget of the unified serve step's
+        # packed token list: ticks compile to exactly two shapes
+        # (decode-only, and decode + up to _qw chunk tokens shared by every
+        # in-flight prefill, dead-token padded)
         self._qw = max(1, cfg.prefill_chunk)
 
     @property
@@ -309,6 +331,19 @@ class ContinuousScheduler:
             return self.pool.free_blocks() >= need
         return True
 
+    def _can_admit_chunked(self, req: Request) -> bool:
+        """Chunked admission claims the prompt's pages for several ticks
+        before the request emits anything, so it must leave headroom: one
+        append page per running decode row stays reserved. Without the
+        guard, an aborted prefill requeued at the head is re-admitted on
+        the very next tick, re-burns its pages, and is aborted again as
+        soon as a decode append runs dry — thrash that can starve decode
+        progress entirely."""
+        if not self.pool.has_free():
+            return False
+        need = self.pool.pages_needed(len(self._prefill_tokens(req)))
+        return self.pool.can_claim(need, reserve=len(self.running))
+
     def _first_sample_spec(self, req: Request):
         """Sampling spec for the first-token draw from the prefill logits.
 
@@ -417,21 +452,24 @@ class ContinuousScheduler:
 
     def _start_chunked(self, req: Request) -> None:
         """Claim a slot + prompt pages; the chunks themselves ride the
-        unified serve step, one ragged row per tick — no device call here,
-        no temp cache, no bucket padding (the static chunk width is the
-        only prefill compilation)."""
+        unified serve step as ragged spans of each tick's packed list — no
+        device call here, no temp cache, no bucket padding (the static
+        budget width is the only prefill compilation)."""
         toks = self._prefill_tokens(req)
         slot = self._alloc_slot(req, len(toks))
         assert slot is not None
         self.slot_temps[slot] = 0.0     # draws armed on the final chunk only
-        self._prefilling = _Prefill(req=req, slot=slot,
-                                    toks=np.asarray(toks, np.int32),
-                                    length=len(toks))
+        self._prefills.append(_Prefill(req=req, slot=slot,
+                                       toks=np.asarray(toks, np.int32),
+                                       length=len(toks)))
+        self.peak_prefills = max(self.peak_prefills, len(self._prefills))
 
     def _arm_first_draw(self, req: Request, slot: int) -> None:
         """Point the slot's sampling vectors at the request's token-0 draw
         so the final prefill chunk's logits are sampled inside the same
-        serve_step call (fresh stochastic singles). Recomputes and greedy
+        serve_step call (fresh stochastic singles). Arming is per slot, on
+        each prefill's OWN final chunk — several prompts finishing in one
+        tick each draw their own first token there. Recomputes and greedy
         requests stay on the exact-argmax path."""
         sp = req.sampling
         if sp is not None and not req.out and not sp.greedy:
@@ -445,11 +483,13 @@ class ContinuousScheduler:
 
     def _admission_tick(self) -> None:
         if self.cfg.prefill_chunk > 0:
-            # starting a chunked prefill is pure host bookkeeping; at most
-            # one chunk per tick then rides the single serve_step call, so
-            # long prompts never stall running requests OR cost a dispatch
-            if self._prefilling is None and self.queue \
-                    and self._can_admit(self.queue[0]):
+            # starting a chunked prefill is pure host bookkeeping; up to
+            # max_prefills prompts then chunk concurrently through the
+            # single serve_step call each tick, so long prompts never
+            # stall running requests, never serialize queued prompts
+            # behind them, and never cost a dispatch
+            while (len(self._prefills) < self.cfg.max_prefills
+                   and self.queue and self._can_admit_chunked(self.queue[0])):
                 self._start_chunked(self.queue.popleft())
             return
         lim = self.cfg.admit_per_step or self.cfg.num_slots
@@ -474,8 +514,10 @@ class ContinuousScheduler:
         self.preemptions += 1
 
     def _abort_prefill(self) -> None:
-        pf = self._prefilling
-        self._prefilling = None
+        """Abort the newest in-flight prefill (the victim ordering mirrors
+        preemption: oldest admissions keep their pages and make progress),
+        freeing its pages and requeueing it at the queue head."""
+        pf = self._prefills.pop()
         self.pool.free(pf.slot)
         self.slot_temps[pf.slot] = 0.0
         pf.req.state, pf.req.slot = QUEUED, -1
@@ -493,7 +535,7 @@ class ContinuousScheduler:
                 victims = [s for s in self.running if s != slot]
                 if victims:
                     self._preempt(max(victims, key=lambda s: self._admit_seq[s]))
-                elif self._prefilling is not None:
+                elif self._prefills:
                     self._abort_prefill()
                 else:
                     raise RuntimeError(
@@ -520,7 +562,7 @@ class ContinuousScheduler:
     # ------------------------------------------------------------------
     def step(self) -> None:
         """One scheduler tick. Paged: ONE jitted serve_step call over the
-        packed ragged batch of decode tokens + the in-flight prefill
+        packed ragged batch of decode tokens + every in-flight prefill's
         chunk. Slots: whole-prompt admission then a separate mixed decode
         call (the comparison layout)."""
         if self.paged:
@@ -530,23 +572,58 @@ class ContinuousScheduler:
         self.clock += 1
         self.ticks += 1
 
+    def _split_budget(self) -> List[int]:
+        """Split the tick's ``_qw``-token chunk budget across the in-flight
+        prefills, shortest-remaining-first: the prefill closest to its last
+        prompt token takes as much of the budget as it can use, then the
+        next-shortest, and so on — short prompts reach their first token in
+        as few ticks as possible instead of waiting out a long prompt.
+
+        Anti-starvation: the OLDEST prefill is first guaranteed a
+        ``budget / max_prefills`` slice before the shortest-first pass
+        spends the rest. Pure shortest-first would let a sustained stream
+        of short prompts zero out a long prompt's share every tick — the
+        long request would hold its claimed pages forever while its TTFT
+        grew without bound. The slice caps its prefill at
+        ``max_prefills * length / budget`` ticks while leaving short
+        prompts the bulk of the budget to keep overtaking.
+        Returns per-prefill token counts aligned with ``self._prefills``
+        (admission order; ties broken oldest-first)."""
+        shares = [0] * len(self._prefills)
+        budget = self._qw
+        if shares:
+            shares[0] = min(self._prefills[0].remaining,
+                            max(1, self._qw // self.cfg.max_prefills))
+            budget -= shares[0]
+        order = sorted(range(len(self._prefills)),
+                       key=lambda i: (self._prefills[i].remaining, i))
+        for i in order:
+            if budget <= 0:
+                break
+            take = min(self._prefills[i].remaining - shares[i], budget)
+            shares[i] += take
+            budget -= take
+        return shares
+
     def _paged_tick(self) -> None:
         """The unified single-dispatch tick: pack the batch's real tokens
-        into one flat list (decode rows, then the prefill chunk) — padding
-        never exceeds the static packed width, so a tick costs the tokens
-        it actually advances, not ``num_slots × chunk``."""
+        into one flat list (decode rows, then every in-flight prefill's
+        chunk) — padding never exceeds the static packed width, so a tick
+        costs the tokens it actually advances, not ``num_slots × budget``."""
         self._admission_tick()
         if self.running:
-            self._ensure_pages()    # may preempt rows / abort the prefill
-        pf = self._prefilling
-        if not self.running and pf is None:
+            self._ensure_pages()    # may preempt rows / abort prefills
+        pfs = self._prefills
+        if not self.running and not pfs:
             return
         ns, qw = self.cfg.num_slots, self._qw
         # two static packed widths (decode-only ticks cost exactly the old
-        # decode call; chunk ticks add qw - 1, the chunking slot not being
-        # a decode row) x serve_step's greedy/sampled traces = at most four
-        # compilations over a scheduler's lifetime
-        T = ns - 1 + qw if pf is not None else ns
+        # decode call; chunk ticks add qw - 1 — the qw-token shared budget,
+        # split across however many prefills are in flight, minus the one
+        # slot a prefill always occupies instead of a decode row) x
+        # serve_step's greedy/sampled traces = at most four compilations
+        # over a scheduler's lifetime
+        T = ns - 1 + qw if pfs else ns
         tokens = np.zeros((T, 1), np.int32)
         token_rows = np.zeros(T, np.int32)
         token_pos = np.full(T, -1, np.int32)     # -1 = dead padding token
@@ -559,19 +636,18 @@ class ContinuousScheduler:
             logit_idx[slot] = t
             self.slot_steps[slot] = len(req.out)
             t += 1
-        hi = 0
-        pf_final = False
-        if pf is not None:
+        shares = self._split_budget()
+        for pf, n in zip(pfs, shares):
+            if n == 0:              # budget spent by shorter prefills
+                continue
             lo = pf.done
-            hi = min(lo + qw, pf.length)
-            n = hi - lo
-            tokens[t:t + n, 0] = pf.toks[lo:hi]
+            tokens[t:t + n, 0] = pf.toks[lo:lo + n]
             token_rows[t:t + n] = pf.slot
-            token_pos[t:t + n] = np.arange(lo, hi)
-            pf_final = hi >= pf.length
-            if pf_final:
+            token_pos[t:t + n] = np.arange(lo, lo + n)
+            if lo + n >= pf.length:
                 logit_idx[pf.slot] = t + n - 1   # the prompt's last token
                 self._arm_first_draw(pf.req, pf.slot)
+            t += n
         sample = (self.slot_temps, self.slot_topk, self.slot_topp,
                   self.slot_keys, self.slot_steps)
         toks, logits, cache = self.engine.serve_step(
@@ -587,21 +663,27 @@ class ContinuousScheduler:
                 self.slot_tokens[slot, 0] = tok
                 if self._emit(req, tok):
                     self._finish(req)
-        if pf is not None:
-            pf.done = hi
+        still: List[_Prefill] = []
+        for pf, n in zip(pfs, shares):
+            if n == 0:
+                still.append(pf)
+                continue
+            pf.done += n
             self.prefill_chunks_run += 1
-            if pf_final:
-                self._prefilling = None
-                spec = self._first_sample_spec(pf.req)
-                if spec is not None and len(spec[0]) > 1:
-                    # fresh n>1 parent: every sample's token 0 comes from
-                    # this one prefill row, each under its own stream (the
-                    # only second dispatch, and only on n>1 installs)
-                    first = self.engine.sample_first(logits[pf.slot], spec)
-                else:
-                    # singles drew (or argmax'd) inside serve_step itself
-                    first = [int(toks[pf.slot])]
-                self._install(pf.req, pf.slot, pf.length, first)
+            if pf.done < pf.length:
+                still.append(pf)
+                continue
+            spec = self._first_sample_spec(pf.req)
+            if spec is not None and len(spec[0]) > 1:
+                # fresh n>1 parent: every sample's token 0 comes from
+                # this one prefill row, each under its own stream (the
+                # only second dispatch, and only on n>1 installs)
+                first = self.engine.sample_first(logits[pf.slot], spec)
+            else:
+                # singles drew (or argmax'd) inside serve_step itself
+                first = [int(toks[pf.slot])]
+            self._install(pf.req, pf.slot, pf.length, first)
+        self._prefills = still
         self.peak_running = max(self.peak_running, len(self.running))
 
     def _slots_tick(self) -> None:
@@ -624,9 +706,13 @@ class ContinuousScheduler:
                 if self._emit(req, tok):
                     self._finish(req)
 
+    def busy(self) -> bool:
+        """Anything left to do: queued, decoding, or mid-prefill."""
+        return bool(self.queue or self.running or self._prefills)
+
     def run(self) -> Dict[int, Request]:
         """Drain everything currently submitted."""
-        while self.queue or self.running or self._prefilling is not None:
+        while self.busy():
             self.step()
         return self.finished
 
@@ -636,10 +722,8 @@ class ContinuousScheduler:
         running batch as their arrival step passes; idle gaps fast-forward."""
         order = sorted(range(len(arrivals)), key=lambda i: arrivals[i][0])
         i = 0
-        while (i < len(order) or self.queue or self.running
-               or self._prefilling is not None):
-            if (not self.queue and not self.running
-                    and self._prefilling is None and i < len(order)
+        while i < len(order) or self.busy():
+            if (not self.busy() and i < len(order)
                     and arrivals[order[i]][0] > self.clock):
                 self.clock = arrivals[order[i]][0]       # idle: fast-forward
             while i < len(order) and arrivals[order[i]][0] <= self.clock:

@@ -11,10 +11,14 @@ Contracts under test:
 * ``model.mixed_step`` with decode tokens is BITWISE the paged
   ``decode_step``, and a chunked ragged prefill reproduces the
   whole-prompt prefill logits;
-* a scheduler tick with both a prefill chunk and decode rows in flight
-  issues exactly ONE jitted device call, and the unified tick's token
-  streams are identical to the whole-prompt two-call path and to static
-  per-request decode.
+* a scheduler tick with prefill chunks and decode rows in flight issues
+  exactly ONE jitted device call — including with SEVERAL prompts
+  chunking concurrently (multi-prefill packing) — and the unified tick's
+  token streams are identical to the whole-prompt two-call path, to
+  serial single-prefill admission, and to static per-request decode;
+* the per-tick chunk budget splits shortest-remaining-first, so a short
+  prompt overtakes a long one mid-prefill (no prefill head-of-line
+  blocking).
 """
 import jax
 import jax.numpy as jnp
@@ -49,6 +53,11 @@ COMPOSITIONS = {
     "mixed": ([0, 2, 1, 1, 1, 1, 3], [13, 3, 5, 6, 7, 8, 0]),
     "dead_tokens": ([1, 0, 0, 0], [9, -1, -1, -1]),
     "straddle_pages": ([0, 2, 2, 2, 2, 2, 2, 3], [7, 5, 6, 7, 8, 9, 10, 30]),
+    # several prefills' chunks packed in one tick (the multi-prefill
+    # scheduler), sharing the budget around decode rows and dead padding
+    "two_chunks": ([0, 1, 1, 1, 2, 2, 3], [13, 0, 1, 2, 4, 5, 26]),
+    "three_chunks_dead": ([1, 1, 0, 2, 2, 3, 3, 0],
+                          [3, 4, 9, 0, 1, 16, 17, -1]),
 }
 
 
@@ -246,10 +255,10 @@ def test_unified_tick_is_one_dispatch(rng, mt_engine):
     sched.step()                # short's whole prompt is one chunk
     sched.submit(long)
     sched.step()                # long starts chunking; short decodes
-    assert sched._prefilling is not None and sched.running, (
+    assert sched._prefills and sched.running, (
         "setup failed: need a chunk and decode rows in the same tick")
     mixed_ticks = 0
-    while sched._prefilling is not None and sched.running:
+    while sched._prefills and sched.running:
         before = eng.dispatches
         sched.step()
         assert eng.dispatches - before == 1, (
@@ -274,7 +283,7 @@ def test_decode_only_tick_is_one_dispatch(rng, mt_engine):
         sched.submit(Request(
             rid=i, prompt=rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
             task_id=i, max_new_tokens=6))
-    while sched.queue or sched._prefilling is not None:
+    while sched.queue or sched._prefills:
         sched.step()
     before = eng.dispatches
     sched.step()                # pure decode tick
@@ -309,6 +318,134 @@ def test_unified_vs_whole_prompt_token_parity(rng, mt_engine):
         outs.append([r.out for r in reqs])
     assert outs[0] == outs[1], (
         "unified chunked tick diverged from whole-prompt admission")
+
+
+def test_multi_prefill_one_dispatch_per_tick(rng, mt_engine):
+    """ACCEPTANCE: with >= 2 prompts chunking concurrently (plus decode
+    rows), every tick is still exactly ONE jitted device call —
+    dispatches/ticks == 1.0 over the whole greedy workload."""
+    cfg, eng = mt_engine
+    sched = ContinuousScheduler(eng, SchedulerConfig(
+        num_slots=6, bucket_min=8, kv_layout="paged", block_size=8,
+        prefill_chunk=8, max_prefills=3))
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 20 + 4 * i)
+                    .astype(np.int32),
+                    task_id=i % 3, max_new_tokens=4 + i) for i in range(4)]
+    d0, t0 = eng.dispatches, sched.ticks
+    for r in reqs:
+        sched.submit(r)
+    sched.step()
+    assert len(sched._prefills) >= 2, (
+        "setup failed: need >= 2 prefills in flight")
+    sched.run()
+    sched.pool.check_no_leaks()
+    assert sched.peak_prefills >= 2
+    ticks = sched.ticks - t0
+    assert (eng.dispatches - d0) / ticks == 1.0, (
+        f"{eng.dispatches - d0} dispatches over {ticks} ticks: "
+        "multi-prefill packing must stay one device call per tick")
+    for req in reqs:
+        ref = eng.generate(req.prompt[None], req.max_new_tokens,
+                           np.asarray([req.task_id], np.int32))[0]
+        np.testing.assert_array_equal(np.asarray(req.out), ref)
+
+
+def test_multi_prefill_bitwise_matches_serial_admission(rng, mt_engine):
+    """ACCEPTANCE: packing several prefills per tick produces bitwise the
+    token streams of serial admission (max_prefills=1, the old
+    one-prefill-at-a-time scheduler)."""
+    cfg, eng = mt_engine
+
+    def mk():
+        rr = np.random.default_rng(23)
+        return [Request(
+            rid=i,
+            prompt=rr.integers(0, cfg.vocab_size,
+                               int(rr.integers(3, 33))).astype(np.int32),
+            task_id=int(rr.integers(0, 3)),
+            max_new_tokens=int(rr.integers(1, 9))) for i in range(7)]
+
+    outs = []
+    for k in (4, 1):
+        reqs = mk()
+        sched = ContinuousScheduler(eng, SchedulerConfig(
+            num_slots=4, bucket_min=8, kv_layout="paged", block_size=8,
+            prefill_chunk=8, max_prefills=k))
+        for r in reqs:
+            sched.submit(r)
+        sched.run()
+        sched.pool.check_no_leaks()
+        if k > 1:
+            assert sched.peak_prefills >= 2, (
+                "setup failed: prefills never overlapped")
+        outs.append([r.out for r in reqs])
+    assert outs[0] == outs[1], (
+        "multi-prefill packing diverged from serial single-prefill "
+        "admission")
+
+
+def test_budget_split_shortest_remaining_first(rng, mt_engine):
+    """A short prompt arriving while a long prompt is mid-chunking takes
+    the budget first and reaches its first token ahead of the long one —
+    the head-of-line-blocking fix this PR exists for."""
+    cfg, eng = mt_engine
+    sched = ContinuousScheduler(eng, SchedulerConfig(
+        num_slots=4, bucket_min=8, kv_layout="paged", block_size=8,
+        prefill_chunk=8, max_prefills=2))
+    first_tick = {}
+
+    def note(req, tok):
+        first_tick.setdefault(req.rid, sched.ticks)
+
+    long = Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, 40)
+                   .astype(np.int32), task_id=0, max_new_tokens=4,
+                   on_token=note)
+    short = Request(rid=1, prompt=rng.integers(0, cfg.vocab_size, 6)
+                    .astype(np.int32), task_id=1, max_new_tokens=4,
+                    on_token=note)
+    sched.submit(long)
+    sched.step()                # long starts chunking (5 ticks of work)
+    sched.submit(short)
+    sched.run()
+    sched.pool.check_no_leaks()
+    assert first_tick[1] < first_tick[0], (
+        f"short prompt TTFT tick {first_tick[1]} not ahead of the long "
+        f"prompt's {first_tick[0]}: budget split is not "
+        "shortest-remaining-first")
+
+
+def test_oldest_prefill_never_starved_by_short_stream(rng, mt_engine):
+    """REGRESSION: a sustained stream of short prompts must not zero out
+    a long in-flight prefill's budget share forever (it holds its claimed
+    pages the whole time). The oldest prefill's guaranteed
+    budget/max_prefills slice bounds its prefill at
+    max_prefills * prompt / budget ticks regardless of arrival load."""
+    cfg, eng = mt_engine
+    sched = ContinuousScheduler(eng, SchedulerConfig(
+        num_slots=6, bucket_min=8, kv_layout="paged", block_size=8,
+        prefill_chunk=8, max_prefills=2))
+    long = Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, 40)
+                   .astype(np.int32), task_id=0, max_new_tokens=2)
+    sched.submit(long)
+    sched.step()                    # long starts chunking (oldest prefill)
+    # guaranteed slice = 8 // 2 = 4 tokens/tick -> <= 10 chunking ticks
+    rid = 1
+    for tick in range(14):
+        sched.submit(Request(     # keep a short prompt always in flight
+            rid=rid, prompt=rng.integers(0, cfg.vocab_size, 4)
+            .astype(np.int32), task_id=rid % 3, max_new_tokens=2))
+        rid += 1
+        sched.step()
+        if long.out:
+            break
+    assert long.out, (
+        "long prefill starved: 14 ticks of short-prompt pressure and no "
+        "first token (guaranteed budget slice not applied)")
+    sched.run()
+    sched.pool.check_no_leaks()
+    ref = eng.generate(long.prompt[None], 2, np.asarray([0], np.int32))[0]
+    np.testing.assert_array_equal(np.asarray(long.out), ref)
 
 
 def test_chunked_prefill_no_temp_cache_copies(rng, mt_engine):

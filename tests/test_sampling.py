@@ -66,6 +66,42 @@ def test_masking_matches_numpy_oracle(rng, top_k, top_p):
                                    rtol=1e-6)
 
 
+def test_masking_topk_ties_break_deterministically(rng):
+    """REGRESSION: logits duplicated at the k-th value must keep exactly k
+    survivors (stable index order), not every token tied at the cutoff.
+    The old single-value-cutoff masking admitted all ties (> k kept)."""
+    V = 32
+    # row 0: all-equal logits; row 1: the top value duplicated 8 times;
+    # row 2: ties exactly at the k-th rank; row 3: no ties (control)
+    logits = np.zeros((4, V), np.float32)
+    logits[1, 4:12] = 5.0
+    logits[2, :3] = 3.0
+    logits[2, 3:10] = 1.0               # k=5 cuts through this tied run
+    logits[3] = np.linspace(3.0, -3.0, V)
+    ks = np.asarray([4, 3, 5, 6], np.int32)
+    out = np.asarray(masked_logits(
+        jnp.asarray(logits), jnp.full(4, 0.7, jnp.float32),
+        jnp.asarray(ks), jnp.ones(4, jnp.float32)))
+    neg = np.finfo(np.float32).min
+    for i in range(4):
+        keep = out[i] > neg / 2
+        assert keep.sum() == ks[i], (
+            f"row {i}: {keep.sum()} survivors, want exactly k={ks[i]}")
+        oracle = _np_masked_oracle(logits[i], 0.7, int(ks[i]), 1.0)
+        np.testing.assert_array_equal(
+            keep, oracle, err_msg=f"row {i}: tie-break diverged from the "
+                                  "stable-argsort oracle")
+    # top-p through a tied run must also respect the prefix length
+    logits_p = np.zeros((1, V), np.float32)
+    out_p = np.asarray(masked_logits(
+        jnp.asarray(logits_p), jnp.ones(1, jnp.float32),
+        jnp.zeros(1, jnp.int32), jnp.full(1, 0.5, jnp.float32)))
+    kept_p = (out_p[0] > neg / 2)
+    oracle_p = _np_masked_oracle(logits_p[0], 1.0, 0, 0.5)
+    np.testing.assert_array_equal(kept_p, oracle_p)
+    assert kept_p.sum() == oracle_p.sum() < V
+
+
 def test_masking_heterogeneous_rows_independent(rng):
     """Per-row params in one batched call == one call per row."""
     b, V = 5, 32
@@ -354,7 +390,7 @@ def test_fork_shares_prompt_pages(rng, mt_engine):
             num_slots=6, bucket_min=8, kv_layout="paged", block_size=4))
         sched.submit(req)
         peak = 0
-        while sched.queue or sched.running or sched._prefilling is not None:
+        while sched.busy():
             sched.step()
             peak = max(peak, sched.pool.blocks_in_use())
         sched.pool.check_no_leaks()

@@ -112,6 +112,137 @@ def test_paged_admission_backpressure(rng, mt_engine):
     assert len(finished) == 6 and sched.pool.free_blocks() == 7
 
 
+def test_page_starved_pool_decodes_without_thrash(rng, mt_engine):
+    """REGRESSION (prefill-abort thrash): chunked admission must leave an
+    append-page reserve for running decode rows. Without the guard, a
+    queued prompt is admitted into a page-starved pool, aborted the moment
+    a decode append runs dry, requeued at the head, and re-admitted next
+    tick — re-burning its pages in a loop while decode stalls. With the
+    guard the prompt waits and decode makes progress."""
+    cfg, eng = mt_engine
+    # 7 usable pages of 8. A (8-token prompt, 1 page) decodes while B's
+    # 36-token prompt wants 5 pages: admitting B without reserve leaves
+    # free = 1 and A's very next page-crossing starts the abort cycle.
+    sched = ContinuousScheduler(eng, SchedulerConfig(
+        num_slots=4, bucket_min=8, kv_layout="paged", block_size=8,
+        num_blocks=8, prefill_chunk=4))
+    a = Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, 8)
+                .astype(np.int32), task_id=0, max_new_tokens=6)
+    b = Request(rid=1, prompt=rng.integers(0, cfg.vocab_size, 36)
+                .astype(np.int32), task_id=1, max_new_tokens=4)
+    sched.submit(a)
+    sched.step()                    # A prefilling (chunked)
+    sched.submit(b)
+    a_done_tick = None
+    for _ in range(200):
+        sched.step()
+        if a.state == "finished" and a_done_tick is None:
+            a_done_tick = sched.ticks
+        if not sched.busy():
+            break
+    assert not sched.busy(), "page-starved pool livelocked"
+    assert a_done_tick is not None, "decode never made progress"
+    assert sched.preemptions == 0, (
+        f"{sched.preemptions} aborts: admission guard failed to hold the "
+        "queued prompt back from a page-starved pool")
+    sched.pool.check_no_leaks()
+    for req in (a, b):
+        ref = eng.generate(req.prompt[None], req.max_new_tokens,
+                           np.asarray([req.task_id], np.int32))[0]
+        np.testing.assert_array_equal(np.asarray(req.out), ref)
+
+
+def test_mid_prefill_abort_recovers_and_recomputes(rng, mt_engine):
+    """A decode page-crossing with zero free pages aborts the newest
+    in-flight prefill MID-PROMPT: its pages free, it requeues at the head,
+    and its eventual re-admission recomputes from token 0 — no leaked
+    pages, token streams exact."""
+    cfg, eng = mt_engine
+    # 7 usable pages. A: 8-token prompt (1 page) + 14 new tokens — crosses
+    # into page 2 on its first append and page 3 at depth 16. B: 40-token
+    # prompt (5 pages) chunked 4/tick (10 ticks). B passes the admission
+    # guard (free 6 >= 5 + 1), then A's depth-16 crossing at ~tick 9 finds
+    # the pool dry and aborts B one chunk short of done.
+    sched = ContinuousScheduler(eng, SchedulerConfig(
+        num_slots=4, bucket_min=8, kv_layout="paged", block_size=8,
+        num_blocks=8, prefill_chunk=4))
+    a = Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, 8)
+                .astype(np.int32), task_id=0, max_new_tokens=14)
+    b = Request(rid=1, prompt=rng.integers(0, cfg.vocab_size, 40)
+                .astype(np.int32), task_id=1, max_new_tokens=3)
+    sched.submit(a)
+    sched.step()                    # A starts chunking (2 ticks of 4)
+    sched.step()
+    sched.submit(b)
+    finished = sched.run()
+    sched.pool.check_no_leaks()
+    assert sched.preemptions >= 1, (
+        "setup failed: B was never aborted mid-prefill")
+    assert len(finished) == 2
+    for req in (a, b):
+        ref = eng.generate(req.prompt[None], req.max_new_tokens,
+                           np.asarray([req.task_id], np.int32))[0]
+        np.testing.assert_array_equal(
+            np.asarray(req.out), ref,
+            err_msg=f"req {req.rid} diverged across the mid-prefill abort")
+
+
+def test_finish_exactly_on_final_chunk_frees_pages(rng, mt_engine):
+    """max_new_tokens=1: the one token comes out of the final prefill
+    chunk's logits and the request finishes INSIDE the install — its slot
+    and pages must free in that same tick (no decode step ever runs)."""
+    cfg, eng = mt_engine
+    sched = ContinuousScheduler(eng, SchedulerConfig(
+        num_slots=3, bucket_min=8, kv_layout="paged", block_size=8,
+        prefill_chunk=8))
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 4 + 7 * i)
+                    .astype(np.int32), task_id=i % 3, max_new_tokens=1)
+            for i in range(3)]
+    for r in reqs:
+        sched.submit(r)
+    finished = sched.run()
+    sched.pool.check_no_leaks()
+    assert sched.pool.num_free() == 3 and sched.pool.free_blocks() == \
+        sched.pool.num_blocks - 1
+    assert len(finished) == 3 and sched.steps_decoded == 0, (
+        "a 1-token request must never enter the decode batch")
+    for req in reqs:
+        ref = eng.generate(req.prompt[None], 1,
+                           np.asarray([req.task_id], np.int32))[0]
+        np.testing.assert_array_equal(np.asarray(req.out), ref)
+
+
+def test_fork_then_preempt_lineage_no_leaks(rng, mt_engine):
+    """An n>1 parent forks its prompt pages COW, then pool pressure
+    preempts forked children mid-decode; recompute re-prefills them as
+    independents. Refcounts and the free lists must reconcile at drain,
+    and the counter-based streams keep every sample's tokens identical to
+    a roomy-pool run."""
+    cfg, eng = mt_engine
+    from repro.serve.sampling import SamplingParams
+    prompt = rng.integers(0, cfg.vocab_size, 18).astype(np.int32)
+
+    def serve(num_blocks):
+        req = Request(rid=0, prompt=prompt, task_id=1, max_new_tokens=10,
+                      sampling=SamplingParams(temperature=0.9, top_p=0.9,
+                                              seed=13, n=3))
+        sched = ContinuousScheduler(eng, SchedulerConfig(
+            num_slots=4, bucket_min=8, kv_layout="paged", block_size=8,
+            num_blocks=num_blocks))
+        sched.submit(req)
+        sched.run()
+        sched.pool.check_no_leaks()
+        return req, sched
+
+    roomy, _ = serve(num_blocks=0)          # capacity parity: no pressure
+    tight, sched = serve(num_blocks=7)      # 6 usable pages: forces churn
+    assert sched.pool.forks > 0, "setup failed: parent never forked"
+    assert sched.preemptions > 0, "setup failed: no child was preempted"
+    assert sched.pool.free_blocks() == 6 and sched.pool.num_free() == 4
+    assert tight.samples == roomy.samples, (
+        "fork-then-preempt lineage changed a sample's tokens")
+
+
 def test_streaming_and_latency_bookkeeping(rng, mt_engine):
     cfg, eng = mt_engine
     sched = ContinuousScheduler(eng, SchedulerConfig(num_slots=2, bucket_min=8))
