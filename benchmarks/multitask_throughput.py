@@ -46,6 +46,7 @@ import numpy as np
 from benchmarks.common import bench_model, emit, random_aot_fused, time_fn
 from repro.core import aot as A
 from repro.kernels.decode_attention import round_kv_len
+from repro.obs import ServeObservability
 from repro.serve.engine import ServeConfig, ServeEngine
 from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import ContinuousScheduler, Request, SchedulerConfig
@@ -245,9 +246,13 @@ def run_mixed_step(n_tasks=2, contig_slots=2, max_len=256, prompt=8,
     paged_slots = min(n_requests, budget_tokens // block_size)
 
     def serve():
+        # metrics on for the measured run too: the no-Heisenberg test
+        # guarantees tokens are unchanged, and the registry feeds the
+        # page/SLO fields below straight into BENCH_serve.json
+        obs = ServeObservability(metrics=True)
         sched = ContinuousScheduler(eng, SchedulerConfig(
             num_slots=paged_slots, kv_layout="paged", block_size=block_size,
-            num_blocks=num_blocks, prefill_chunk=block_size))
+            num_blocks=num_blocks, prefill_chunk=block_size), obs=obs)
         reqs = _requests(rng, cfg, n_requests, n_tasks, prompt,
                          max_new, max_new)
         for r in reqs:
@@ -260,10 +265,11 @@ def run_mixed_step(n_tasks=2, contig_slots=2, max_len=256, prompt=8,
         per_tick = dispatches / max(sched.ticks, 1)
         prompt_toks = sum(len(r.prompt) for r in reqs)
         tpd = (sched.tokens_emitted + prompt_toks) / max(dispatches, 1)
-        return sched, sched.tokens_emitted / dt, per_tick, tpd
+        return sched, obs, sched.tokens_emitted / dt, per_tick, tpd
 
     serve()                                  # warm the serve_step trace
-    sched, tput, per_tick, tpd = serve()
+    sched, obs, tput, per_tick, tpd = serve()
+    slo = obs.slo.summary()
     emit("multitask/mixed_step", 0.0,
          f"tok_per_s={tput:.0f} dispatches_per_tick={per_tick:.2f} "
          f"tokens_per_dispatch={tpd:.1f} ticks={sched.ticks}")
@@ -280,6 +286,12 @@ def run_mixed_step(n_tasks=2, contig_slots=2, max_len=256, prompt=8,
         "tokens_per_dispatch": round(tpd, 2),
         "ticks": sched.ticks,
         "prefill_chunks": sched.prefill_chunks_run,
+        # load-invariant lifecycle percentiles (scheduler ticks, from the
+        # observability layer's SLO tracker)
+        "peak_pages": sched.pool.peak_pages,
+        "ttft_p50_ticks": slo["ttft_ticks"]["p50"],
+        "ttft_p99_ticks": slo["ttft_ticks"]["p99"],
+        "tpot_p50_ticks": slo["tpot_ticks"]["p50"],
         # same workload as paged_equal_hbm's paged arm (which also routes
         # through the unified tick now); tok/s differences between the two
         # entries are CPU timing noise — dispatches_per_tick and
@@ -322,13 +334,13 @@ def run_multi_prefill(n_tasks=2, slots=8, max_len=256, block_size=16,
 
     def serve(max_prefills):
         stream = arrivals()
+        # the SLO tracker stamps submit/first-token on sched.ticks at the
+        # same transitions this loop used to hand-roll via on_token
+        # callbacks, so the reported TTFT tick values are unchanged
+        obs = ServeObservability(metrics=True, check_leaks=True)
         sched = ContinuousScheduler(eng, SchedulerConfig(
             num_slots=slots, kv_layout="paged", block_size=block_size,
-            prefill_chunk=budget, max_prefills=max_prefills))
-        submit_tick, first_tick = {}, {}
-        for _, r in stream:
-            r.on_token = lambda req, tok: first_tick.setdefault(
-                req.rid, sched.ticks)
+            prefill_chunk=budget, max_prefills=max_prefills), obs=obs)
         d0 = eng.dispatches
         t0 = time.perf_counter()
         i, idle_ticks = 0, 0
@@ -343,24 +355,22 @@ def run_multi_prefill(n_tasks=2, slots=8, max_len=256, block_size=16,
                     sched.clock += 1
                     idle_ticks += 1
             while i < len(stream) and stream[i][0] <= sched.ticks:
-                submit_tick[stream[i][1].rid] = sched.ticks
                 sched.submit(stream[i][1])
                 i += 1
             sched.step()
         dt = time.perf_counter() - t0
-        sched.pool.check_no_leaks()
+        assert sched.drain_check() == []
         fin = sched.finished
         assert len(fin) == n_requests
-        ttft_ticks = np.asarray(sorted(
-            first_tick[rid] - submit_tick[rid] for rid in first_tick))
+        slo = obs.slo.summary()
         ttft_ms = np.asarray(sorted((r.t_first - r.t_submit) * 1e3
                                     for r in fin.values()))
         dispatches = eng.dispatches - d0
         busy_ticks = sched.ticks - idle_ticks
         prompt_toks = sum(len(r.prompt) for r in fin.values())
         return {
-            "ttft_p50_ticks": float(np.percentile(ttft_ticks, 50)),
-            "ttft_p99_ticks": float(np.percentile(ttft_ticks, 99)),
+            "ttft_p50_ticks": slo["ttft_ticks"]["p50"],
+            "ttft_p99_ticks": slo["ttft_ticks"]["p99"],
             "ttft_p50_ms": round(float(np.percentile(ttft_ms, 50)), 2),
             "ttft_p99_ms": round(float(np.percentile(ttft_ms, 99)), 2),
             "tok_per_s": round(sched.tokens_emitted / dt, 1),
@@ -370,6 +380,7 @@ def run_multi_prefill(n_tasks=2, slots=8, max_len=256, block_size=16,
                 (sched.tokens_emitted + prompt_toks) / max(dispatches, 1), 2),
             "peak_prefills": sched.peak_prefills,
             "preemptions": sched.preemptions,
+            "queue_wait_p50_ticks": slo["queue_wait_ticks"]["p50"],
         }
 
     serve(1), serve(4)                       # warm both compilations

@@ -26,6 +26,7 @@ import numpy as np
 from repro import configs
 from repro.core import aot as aot_mod
 from repro.models.model import Model, ModelOptions
+from repro.obs import ServeObservability
 from repro.serve.engine import ServeConfig, ServeEngine
 from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import ContinuousScheduler, Request, SchedulerConfig
@@ -114,6 +115,29 @@ def main():
                     help="old behavior: one static batch, uniform lengths")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress per-token streaming output")
+    obs_g = ap.add_argument_group("observability (repro.obs)")
+    obs_g.add_argument("--metrics", action="store_true",
+                       help="collect serve-path metrics + request "
+                            "lifecycles; prints the snapshot and the "
+                            "TTFT/TPOT/e2e SLO summary at drain")
+    obs_g.add_argument("--metrics-out", metavar="FILE",
+                       help="append the final metrics snapshot as one "
+                            "JSONL line (implies --metrics)")
+    obs_g.add_argument("--trace-out", metavar="FILE",
+                       help="write a Chrome-trace-event JSON of every "
+                            "scheduler tick (admission / budget split / "
+                            "dispatch / postprocess spans; open in "
+                            "chrome://tracing or ui.perfetto.dev)")
+    obs_g.add_argument("--jax-profile", metavar="DIR",
+                       help="bracket the run with jax.profiler so device "
+                            "traces line up with the scheduler spans")
+    obs_g.add_argument("--check-leaks", action="store_true",
+                       help="debug: sweep KV-pool alloc/refcount "
+                            "invariants at drain; findings go into the "
+                            "metrics snapshot and fail the run")
+    obs_g.add_argument("--slo-ttft-ticks", type=float, default=8.0,
+                       help="TTFT SLO target in real scheduler ticks "
+                            "(attainment reported with --metrics)")
     args = ap.parse_args()
 
     if not args.demo and not args.load:
@@ -193,18 +217,43 @@ def main():
         print("warning: chunked prefill rides the unified paged serve step; "
               "--layout slots falls back to whole-prompt prefills")
         args.prefill_chunk = 0
+    want_obs = (args.metrics or args.metrics_out or args.trace_out
+                or args.jax_profile or args.check_leaks)
+    obs = None
+    if want_obs:
+        obs = ServeObservability(
+            metrics=bool(args.metrics or args.metrics_out),
+            trace=bool(args.trace_out), jax_profile_dir=args.jax_profile,
+            check_leaks=args.check_leaks)
     sched = ContinuousScheduler(eng, SchedulerConfig(
         num_slots=args.slots, kv_layout=args.layout,
         block_size=args.block_size, num_blocks=args.num_blocks,
-        prefill_chunk=args.prefill_chunk, max_prefills=args.max_prefills))
-    finished = sched.run_stream(arrivals)
+        prefill_chunk=args.prefill_chunk, max_prefills=args.max_prefills),
+        obs=obs)
+    if obs is not None:
+        obs.tracer.start()          # no-op without --jax-profile
+    try:
+        finished = sched.run_stream(arrivals)
+    finally:
+        if obs is not None:
+            obs.tracer.stop()
+            if args.trace_out:
+                obs.tracer.write(args.trace_out)
+                print(f"tick trace -> {args.trace_out} "
+                      f"({len(obs.tracer.events)} events; load in "
+                      "chrome://tracing or ui.perfetto.dev)")
     # a tick is not "one decode step plus maybe one prefill chunk" anymore:
     # the paged path folds chunk + decode rows into ONE device call, so
-    # report realized dispatches per tick instead of assuming the split
-    # (sched.ticks counts real step() calls; sched.clock fast-forwards
-    # across idle gaps in the arrival stream and would dilute the ratio)
+    # report realized dispatches per tick instead of assuming the split.
+    # sched.ticks counts REAL step() calls only; sched.clock additionally
+    # fast-forwards across idle gaps in the arrival stream, so the
+    # difference is exactly the idle air that must never leak into
+    # per-tick aggregates (it used to skew the old combined report)
+    idle_gap = sched.clock - sched.ticks
     per_tick = eng.dispatches / max(sched.ticks, 1)
-    print(f"\nserved {len(finished)} requests in {sched.ticks} ticks: "
+    print(f"\nserved {len(finished)} requests in {sched.ticks} real ticks "
+          f"(+{idle_gap} idle fast-forwarded arrival steps, excluded from "
+          "every per-tick stat): "
           f"{sched.steps_decoded} decode steps, {sched.prefill_chunks_run} "
           f"prefill chunks, {sched.tokens_emitted} tokens, "
           f"{eng.dispatches} device dispatches ({per_tick:.2f}/tick, "
@@ -212,10 +261,43 @@ def main():
     if sched.paged:
         pool = sched.pool
         print(f"paged pool: {pool.num_blocks - 1} usable pages x "
-              f"{pool.block_size} tokens, peak concurrency "
-              f"{sched.peak_running}, peak concurrent prefills "
-              f"{sched.peak_prefills}, {sched.preemptions} preemptions, "
+              f"{pool.block_size} tokens, peak pages {pool.peak_pages}, "
+              f"peak concurrency {sched.peak_running}, "
+              f"peak concurrent prefills {sched.peak_prefills}, "
+              f"{sched.preemptions} preemptions, "
               f"{pool.forks} forks, {pool.cow_copies} COW page copies")
+    if obs is not None and obs.metrics.enabled:
+        summary = obs.slo.summary(
+            targets={"ttft_ticks": args.slo_ttft_ticks})
+        # tick series and wall series are separate on purpose: ticks are
+        # load-invariant and idle-proof (one tick == one dispatch's worth
+        # of scheduler work); wall ms swings with machine load and eats
+        # every jit compile — never mix the two
+        tick = {k: v for k, v in summary.items() if k.endswith("_ticks")}
+        wall = {k: v for k, v in summary.items() if k.endswith("_ms")}
+        print("\nSLO summary (real-tick series, load-invariant):")
+        for k, v in tick.items():
+            print(f"  {k:>18}: p50={v['p50']:g} p95={v['p95']:g} "
+                  f"p99={v['p99']:g}")
+        print("SLO summary (wall-clock series; includes jit compiles, "
+              "swings with machine load):")
+        for k, v in wall.items():
+            print(f"  {k:>18}: p50={v['p50']:g} p95={v['p95']:g} "
+                  f"p99={v['p99']:g}")
+        for name, frac in summary.get("slo_attainment", {}).items():
+            print(f"  attainment {name}: {frac:.1%}")
+        if sched.drain_check():
+            print("  WARNING: drain-time leak findings in metrics "
+                  "snapshot (kv_leak_findings)")
+        if args.metrics_out:
+            obs.metrics.write_jsonl(args.metrics_out,
+                                    extra={"slo": summary,
+                                           "ticks": sched.ticks,
+                                           "idle_fast_forward": idle_gap})
+            print(f"metrics JSONL -> {args.metrics_out}")
+        if args.metrics:
+            print("\nmetrics snapshot (prometheus text):")
+            print(obs.metrics.prometheus_text())
     for rid in sorted(finished):
         req = finished[rid]
         ms = (req.t_done - req.t_submit) * 1e3

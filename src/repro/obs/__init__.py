@@ -1,0 +1,60 @@
+"""Serve-path observability: metrics registry, tick tracing, SLO accounting.
+
+Three pillars, one facade:
+
+  * :mod:`repro.obs.metrics` — counters / gauges / fixed-bucket
+    histograms with JSONL and Prometheus-text export;
+  * :mod:`repro.obs.tracing` — Chrome-trace-event spans per scheduler
+    tick (Perfetto-loadable) plus an opt-in ``jax.profiler`` bracket;
+  * :mod:`repro.obs.slo` — per-request lifecycle timestamps (tick AND
+    wall series) aggregated into TTFT/TPOT/e2e percentiles and SLO
+    attainment.
+
+:class:`ServeObservability` bundles the three so call sites thread ONE
+object: ``ContinuousScheduler(engine, cfg, obs=ServeObservability())``.
+``NULL_OBS`` is the shared disabled bundle the scheduler falls back to
+when no observability is requested — every hook on it is a no-op and it
+holds no state, so it is safe to share across schedulers and its cost is
+an attribute lookup per instrumentation site. Nothing in this package
+ever runs inside jitted code: instrumentation reads the host scalars the
+scheduler already computes per tick, which is why enabling observability
+is bitwise-invisible to the token streams (test-enforced).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.obs.metrics import (  # noqa: F401
+    Counter, Gauge, Histogram, MetricsRegistry,
+    NULL_COUNTER, NULL_GAUGE, NULL_HISTOGRAM)
+from repro.obs.slo import Lifecycle, SLOTracker  # noqa: F401
+from repro.obs.tracing import NULL_TRACER, TickTracer  # noqa: F401
+
+
+class ServeObservability:
+    """The bundle a scheduler (and the pools/engine under it) reports to.
+
+    ``metrics``/``trace`` toggle the pillars independently;
+    ``jax_profile_dir`` arms the device-profiler bracket (opened by
+    :meth:`TickTracer.start`, typically via the launcher);
+    ``check_leaks`` asks the scheduler to sweep the KV pool's invariants
+    at drain time and publish any findings through the metrics snapshot.
+    """
+
+    def __init__(self, metrics: bool = True, trace: bool = False,
+                 jax_profile_dir: Optional[str] = None,
+                 check_leaks: bool = False):
+        self.metrics = MetricsRegistry(enabled=metrics)
+        self.tracer = (TickTracer(enabled=True, jax_profile_dir=jax_profile_dir)
+                       if trace or jax_profile_dir else NULL_TRACER)
+        self.slo = SLOTracker(enabled=metrics)
+        self.check_leaks = check_leaks
+
+    @property
+    def enabled(self) -> bool:
+        return self.metrics.enabled or self.tracer.enabled
+
+
+# the shared disabled bundle: stateless (null instruments swallow every
+# write), so one instance serves every uninstrumented scheduler
+NULL_OBS = ServeObservability(metrics=False, trace=False)

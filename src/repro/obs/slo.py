@@ -1,0 +1,210 @@
+"""Request-lifecycle accounting: TTFT / TPOT / e2e percentiles and SLO
+attainment.
+
+The scheduler reports every request state transition here — submit,
+admission (first page/slot claim), first emitted token, preemption, and
+finish — and each transition is stamped TWICE: on the scheduler's real
+tick counter (``ContinuousScheduler.ticks``, which counts actual
+``step()`` calls) and on the wall clock.
+
+The two series answer different questions and must not be mixed:
+
+  * **Tick series** are load-invariant: a tick is one device dispatch's
+    worth of scheduler work, so "TTFT p50 = 1 tick" means the same thing
+    on a loaded CI runner and an idle TPU host. They are also immune to
+    the launcher's idle fast-forwarding — ``run_stream`` jumps the
+    *arrival clock* over idle gaps, but real ticks only count executed
+    steps, so queue-wait measured in ticks never absorbs simulated idle
+    air. These are the numbers BENCH_serve.json trends on.
+  * **Wall series** (ms) are what a user feels, but on CPU they swing
+    ±20% with machine load and the first request eats every jit
+    compilation. Context, not acceptance criteria.
+
+TPOT (time per output token) is the steady-state decode interval:
+``(done - first_token) / (tokens - 1)``, only defined for requests that
+emitted at least two tokens.
+
+SLO attainment is the fraction of finished requests meeting a per-metric
+threshold (e.g. ``{"ttft_ticks": 4, "e2e_ms": 500}``) — the
+machine-checkable form of "negligible serving overhead".
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class Lifecycle:
+    """One request's (or one n>1 sample child's) transition timestamps."""
+    rid: int
+    sample_idx: int = 0
+    prompt_len: int = 0
+    tokens: int = 0
+    preemptions: int = 0
+    admissions: int = 0                      # > 1 after preempt-recompute
+    submit_tick: int = 0
+    submit_wall: float = 0.0
+    admit_tick: Optional[int] = None         # first admission only
+    admit_wall: Optional[float] = None
+    first_tick: Optional[int] = None
+    first_wall: Optional[float] = None
+    done_tick: Optional[int] = None
+    done_wall: Optional[float] = None
+
+    # ------------------------------------------------------------------
+    # derived (valid once finished)
+    # ------------------------------------------------------------------
+    def queue_wait_ticks(self) -> int:
+        return self.admit_tick - self.submit_tick
+
+    def ttft_ticks(self) -> int:
+        return self.first_tick - self.submit_tick
+
+    def ttft_ms(self) -> float:
+        return (self.first_wall - self.submit_wall) * 1e3
+
+    def tpot_ticks(self) -> Optional[float]:
+        if self.tokens < 2:
+            return None
+        return (self.done_tick - self.first_tick) / (self.tokens - 1)
+
+    def tpot_ms(self) -> Optional[float]:
+        if self.tokens < 2:
+            return None
+        return (self.done_wall - self.first_wall) * 1e3 / (self.tokens - 1)
+
+    def e2e_ticks(self) -> int:
+        return self.done_tick - self.submit_tick
+
+    def e2e_ms(self) -> float:
+        return (self.done_wall - self.submit_wall) * 1e3
+
+
+def _pctls(vals: List[float], qs=(50, 95, 99)) -> Dict[str, float]:
+    if not vals:
+        return {f"p{q}": 0.0 for q in qs}
+    arr = np.asarray(vals, np.float64)
+    return {f"p{q}": round(float(np.percentile(arr, q)), 3) for q in qs}
+
+
+class SLOTracker:
+    """Collects :class:`Lifecycle` records from scheduler hooks.
+
+    Keys are ``(rid, sample_idx)`` so n>1 parallel-sample children each
+    get their own record; a child created mid-flight (COW fork or
+    requeued sibling) inherits the parent's submit stamp, so its TTFT is
+    measured from the original request's submission like the user would.
+    Disabled trackers no-op every hook (and hold no state), mirroring the
+    null-instrument convention of :mod:`repro.obs.metrics`.
+    """
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self.records: Dict[Tuple[int, int], Lifecycle] = {}
+        self.finished: List[Lifecycle] = []
+
+    def _rec(self, req, tick: int) -> Lifecycle:
+        key = (req.rid, req.sample_idx)
+        rec = self.records.get(key)
+        if rec is None:
+            # an unseen child inherits the parent's submit stamps
+            base = self.records.get((req.rid, 0))
+            st = base.submit_tick if base is not None else tick
+            sw = base.submit_wall if base is not None else time.perf_counter()
+            rec = self.records[key] = Lifecycle(
+                rid=req.rid, sample_idx=req.sample_idx,
+                prompt_len=len(req.prompt), submit_tick=st, submit_wall=sw)
+        return rec
+
+    # ------------------------------------------------------------------
+    # scheduler hooks
+    # ------------------------------------------------------------------
+    def on_submit(self, req, tick: int) -> None:
+        if not self.enabled:
+            return
+        key = (req.rid, req.sample_idx)
+        if key not in self.records:
+            self.records[key] = Lifecycle(
+                rid=req.rid, sample_idx=req.sample_idx,
+                prompt_len=len(req.prompt), submit_tick=tick,
+                submit_wall=time.perf_counter())
+
+    def on_admit(self, req, tick: int) -> None:
+        if not self.enabled:
+            return
+        rec = self._rec(req, tick)
+        rec.admissions += 1
+        if rec.admit_tick is None:
+            rec.admit_tick = tick
+            rec.admit_wall = time.perf_counter()
+
+    def on_first_token(self, req, tick: int) -> None:
+        if not self.enabled:
+            return
+        rec = self._rec(req, tick)
+        if rec.first_tick is None:
+            rec.first_tick = tick
+            rec.first_wall = time.perf_counter()
+
+    def on_preempt(self, req, tick: int) -> None:
+        if not self.enabled:
+            return
+        self._rec(req, tick).preemptions += 1
+
+    def on_finish(self, req, tick: int) -> None:
+        if not self.enabled:
+            return
+        rec = self._rec(req, tick)
+        rec.tokens = len(req.out)
+        rec.done_tick = tick
+        rec.done_wall = time.perf_counter()
+        # a finished request always emitted >= 1 token; a request that
+        # finishes on its prefill-install draw stamps first == done here
+        if rec.first_tick is None:
+            rec.first_tick, rec.first_wall = rec.done_tick, rec.done_wall
+        if rec.admit_tick is None:
+            rec.admit_tick, rec.admit_wall = rec.first_tick, rec.first_wall
+        self.finished.append(rec)
+
+    # ------------------------------------------------------------------
+    # aggregation
+    # ------------------------------------------------------------------
+    def summary(self, targets: Optional[Dict[str, float]] = None) -> dict:
+        """p50/p95/p99 of every lifecycle interval, tick and wall series
+        reported side by side but never mixed, plus SLO attainment for
+        ``targets`` ({metric_name: threshold}, metric names as in the
+        output: ``ttft_ticks``, ``ttft_ms``, ``tpot_ticks``, ``tpot_ms``,
+        ``e2e_ticks``, ``e2e_ms``, ``queue_wait_ticks``)."""
+        fin = self.finished
+        series: Dict[str, List[float]] = {
+            "queue_wait_ticks": [r.queue_wait_ticks() for r in fin],
+            "ttft_ticks": [r.ttft_ticks() for r in fin],
+            "ttft_ms": [r.ttft_ms() for r in fin],
+            "tpot_ticks": [t for r in fin
+                           if (t := r.tpot_ticks()) is not None],
+            "tpot_ms": [t for r in fin if (t := r.tpot_ms()) is not None],
+            "e2e_ticks": [r.e2e_ticks() for r in fin],
+            "e2e_ms": [r.e2e_ms() for r in fin],
+        }
+        out: dict = {
+            "requests": len(fin),
+            "tokens": sum(r.tokens for r in fin),
+            "preemptions": sum(r.preemptions for r in fin),
+            "readmissions": sum(max(0, r.admissions - 1) for r in fin),
+        }
+        for name, vals in series.items():
+            out[name] = _pctls(vals)
+        if targets:
+            att = {}
+            for name, limit in targets.items():
+                vals = series.get(name)
+                if not vals:
+                    continue
+                ok = sum(1 for v in vals if v <= limit)
+                att[f"{name}<={limit:g}"] = round(ok / len(vals), 4)
+            out["slo_attainment"] = att
+        return out

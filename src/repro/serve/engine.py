@@ -86,6 +86,23 @@ class ServeEngine:
         # the scheduler asserts one dispatch per unified tick and the
         # launcher reports dispatches/tick
         self.dispatches = 0
+        self._m = None                  # optional obs per-kind counters
+
+    def attach_metrics(self, registry) -> None:
+        """Per-kind dispatch counters on an obs registry. Incremented on
+        the host around the jitted calls, never inside them — a tick's
+        dispatch anatomy (serve_step vs legacy prefill+decode pairs vs
+        n>1 first-token draws) becomes visible without touching traces."""
+        self._m = {kind: registry.counter(
+            f"engine_dispatch_{kind}_total",
+            f"device dispatches via {kind}")
+            for kind in ("serve_step", "prefill", "decode_mixed",
+                         "sample_first")}
+
+    def _count(self, kind: str) -> None:
+        self.dispatches += 1
+        if self._m is not None:
+            self._m[kind].inc()
 
     # ------------------------------------------------------------------
     def _peft_for(self, task_ids):
@@ -194,7 +211,7 @@ class ServeEngine:
         logits, cache, _ = self._prefill_at(
             self.params, jnp.asarray(tokens), jnp.asarray(length - 1, jnp.int32),
             tids)
-        self.dispatches += 1
+        self._count("prefill")
         return self._first_tokens(logits, sample), cache
 
     def _first_tokens(self, logits, sample) -> list:
@@ -207,7 +224,7 @@ class ServeEngine:
         parallel-samples path, where every sample's token 0 comes from the
         same prefill row under its own stream."""
         toks = self._sample_row(logits_row, *self._sample_vecs(sample))
-        self.dispatches += 1
+        self._count("sample_first")
         return [int(t) for t in np.asarray(jax.device_get(toks))]
 
     def decode_mixed(self, tokens: np.ndarray, pos: np.ndarray, cache,
@@ -220,7 +237,7 @@ class ServeEngine:
         caller. ``sample``: optional per-slot (temps, top_ks, top_ps,
         base_keys, steps) spec — None keeps the pure-greedy fast path.
         Returns (next token per slot (num_slots,), new cache)."""
-        self.dispatches += 1
+        self._count("decode_mixed")
         if sample is None:
             logits, cache = self._decode(
                 self.params, jnp.asarray(tokens), jnp.asarray(pos, np.int32),
@@ -260,5 +277,5 @@ class ServeEngine:
             jnp.asarray(token_pos, np.int32), jnp.asarray(logit_idx, np.int32),
             cache, jnp.asarray(token_tasks, np.int32),
             jnp.asarray(block_tables, np.int32), *self._sample_vecs(sample))
-        self.dispatches += 1
+        self._count("serve_step")
         return np.asarray(jax.device_get(toks)), logits, cache

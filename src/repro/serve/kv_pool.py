@@ -74,6 +74,17 @@ class SlotKVPool:
         self.task_id = np.zeros(num_slots, np.int32)
         self._free: List[int] = list(range(num_slots - 1, -1, -1))
         self._used: Set[int] = set()
+        self._m = None                      # optional obs instruments
+
+    def attach_metrics(self, registry) -> None:
+        """Slot-occupancy gauge (the contiguous layout has no pages)."""
+        self._m = {"slots_used": registry.gauge(
+            "kv_slots_used", "occupied decode slots")}
+        self._gauge_sync()
+
+    def _gauge_sync(self) -> None:
+        if self._m is not None:
+            self._m["slots_used"].set(len(self._used))
 
     # ------------------------------------------------------------------
     # slot lifecycle
@@ -95,6 +106,7 @@ class SlotKVPool:
         self._used.add(slot)
         self.task_id[slot] = task_id
         self.cur_len[slot] = 0
+        self._gauge_sync()
         return slot
 
     def free(self, slot: int) -> None:
@@ -104,6 +116,7 @@ class SlotKVPool:
         self.cur_len[slot] = 0
         self.task_id[slot] = 0
         self._free.append(slot)
+        self._gauge_sync()
 
     # ------------------------------------------------------------------
     # cache writes
@@ -126,13 +139,30 @@ class SlotKVPool:
             self.cur_len[s] += 1
 
     # ------------------------------------------------------------------
-    def check_no_leaks(self) -> None:
-        """Invariant: every slot is exactly one of free/used (tests)."""
+    def leak_report(self) -> List[str]:
+        """Invariant sweep: every slot exactly one of free/used. Returns
+        human-readable findings (empty = clean) instead of asserting, so
+        the scheduler's drain-time debug check can *report* leaks through
+        the metrics snapshot in live runs; tests assert via
+        :meth:`check_no_leaks`."""
+        bad: List[str] = []
         free = set(self._free)
-        assert len(self._free) == len(free), "duplicate slots on free list"
-        assert not (free & self._used), "slot both free and used"
-        assert free | self._used == set(range(self.num_slots)), "lost slot"
-        assert all(self.cur_len[s] == 0 for s in free), "freed slot has length"
+        if len(self._free) != len(free):
+            bad.append("duplicate slots on free list")
+        both = free & self._used
+        if both:
+            bad.append(f"slots both free and used: {sorted(both)}")
+        lost = set(range(self.num_slots)) - (free | self._used)
+        if lost:
+            bad.append(f"lost slots (neither free nor used): {sorted(lost)}")
+        deep = [s for s in free if self.cur_len[s] != 0]
+        if deep:
+            bad.append(f"freed slots with nonzero length: {deep}")
+        return bad
+
+    def check_no_leaks(self) -> None:
+        report = self.leak_report()
+        assert not report, "slot pool invariants violated: " + "; ".join(report)
 
 
 # ---------------------------------------------------------------------------
@@ -236,6 +266,48 @@ class PagedKVPool:
         self._refs = np.zeros(num_blocks, np.int32)  # sharers per page
         self.forks = 0
         self.cow_copies = 0
+        self.peak_pages = 0                 # high-water blocks_in_use
+        self._m = None                      # optional obs instruments
+
+    # ------------------------------------------------------------------
+    # observability (repro.obs): page-lifecycle counters + pressure gauges
+    # ------------------------------------------------------------------
+    def attach_metrics(self, registry) -> None:
+        """Register this pool's instruments on an obs metrics registry.
+        All bookkeeping here is host-side numpy between device steps, so
+        the instruments only ever observe scalars the pool already holds
+        — attaching cannot perturb the served tokens."""
+        self._m = {
+            "claimed": registry.counter(
+                "kv_pages_claimed_total", "pages taken off the free list"),
+            "freed": registry.counter(
+                "kv_pages_freed_total", "pages returned to the free list"),
+            "forks": registry.counter(
+                "kv_forks_total", "COW slot forks (n>1 sampling)"),
+            "cow": registry.counter(
+                "kv_cow_copies_total", "shared tail pages copied on first "
+                "divergent append"),
+            "free": registry.gauge("kv_pages_free", "free pages right now"),
+            "used": registry.gauge("kv_pages_used", "mapped pages right now"),
+            "peak": registry.gauge("kv_pages_peak", "high-water mapped pages"),
+            "refs": registry.gauge(
+                "kv_page_refs_max", "max sharers of any one page"),
+            "slots_used": registry.gauge(
+                "kv_slots_used", "occupied decode slots"),
+        }
+        self._gauge_sync()
+
+    def _gauge_sync(self) -> None:
+        used = self.blocks_in_use()
+        self.peak_pages = max(self.peak_pages, used)
+        if self._m is None:
+            return
+        m = self._m
+        m["free"].set(len(self._free_blocks))
+        m["used"].set(used)
+        m["peak"].set_max(used)
+        m["refs"].set(int(self._refs.max()))
+        m["slots_used"].set(len(self._used_slots))
 
     # ------------------------------------------------------------------
     # capacity queries
@@ -290,6 +362,9 @@ class PagedKVPool:
         self._pages[slot] = pages
         self._refs[pages] = 1
         self.block_tables[slot, :npages] = pages
+        if self._m is not None:
+            self._m["claimed"].inc(npages)
+        self._gauge_sync()
         return slot
 
     def fork(self, slot: int) -> Optional[int]:
@@ -311,6 +386,9 @@ class PagedKVPool:
         self.cur_len[new] = self.cur_len[slot]
         self.task_id[new] = self.task_id[slot]
         self.forks += 1
+        if self._m is not None:
+            self._m["forks"].inc()
+        self._gauge_sync()
         return new
 
     def ensure_append_page(self, slot: int) -> bool:
@@ -335,6 +413,10 @@ class PagedKVPool:
             pages[need] = new
             self.block_tables[slot, need] = new
             self.cow_copies += 1
+            if self._m is not None:
+                self._m["cow"].inc()
+                self._m["claimed"].inc()
+            self._gauge_sync()
             return True
         assert need == len(pages), "append skipped a page"
         if not self._free_blocks:
@@ -343,20 +425,28 @@ class PagedKVPool:
         self._refs[page] = 1
         pages.append(page)
         self.block_tables[slot, need] = page
+        if self._m is not None:
+            self._m["claimed"].inc()
+        self._gauge_sync()
         return True
 
     def free(self, slot: int) -> None:
         if slot not in self._used_slots:
             raise ValueError(f"slot {slot} is not allocated")
         self._used_slots.remove(slot)
+        returned = 0
         for page in reversed(self._pages.pop(slot)):
             self._refs[page] -= 1
             if self._refs[page] == 0:
                 self._free_blocks.append(page)
+                returned += 1
         self.block_tables[slot] = 0
         self.cur_len[slot] = 0
         self.task_id[slot] = 0
         self._free_slots.append(slot)
+        if self._m is not None:
+            self._m["freed"].inc(returned)
+        self._gauge_sync()
 
     # ------------------------------------------------------------------
     # cache writes
@@ -398,28 +488,59 @@ class PagedKVPool:
             self.cur_len[s] += 1
 
     # ------------------------------------------------------------------
-    def check_no_leaks(self) -> None:
-        """Invariant: slots partition into free/used; every page's refcount
-        equals the number of slots mapping it; the free list is exactly the
-        refcount-zero pages (scratch page 0 excluded)."""
+    def leak_report(self) -> List[str]:
+        """Invariant sweep: slots partition into free/used; every page's
+        refcount equals the number of slots mapping it; the free list is
+        exactly the refcount-zero pages (scratch page 0 excluded).
+
+        Returns human-readable findings (empty = clean) instead of
+        asserting — the scheduler's drain-time debug check
+        (``SchedulerConfig.check_leaks``) reports them through the obs
+        metrics snapshot so live ``launch/serve.py`` runs catch page
+        leaks in the wild; tests assert via :meth:`check_no_leaks`."""
+        bad: List[str] = []
         free = set(self._free_slots)
-        assert len(self._free_slots) == len(free), "duplicate slots on free list"
-        assert not (free & self._used_slots), "slot both free and used"
-        assert free | self._used_slots == set(range(self.num_slots)), "lost slot"
-        assert all(self.cur_len[s] == 0 for s in free), "freed slot has length"
-        assert set(self._pages) == self._used_slots, "page map out of sync"
+        if len(self._free_slots) != len(free):
+            bad.append("duplicate slots on free list")
+        both = free & self._used_slots
+        if both:
+            bad.append(f"slots both free and used: {sorted(both)}")
+        lost = set(range(self.num_slots)) - (free | self._used_slots)
+        if lost:
+            bad.append(f"lost slots (neither free nor used): {sorted(lost)}")
+        deep = [s for s in free if self.cur_len[s] != 0]
+        if deep:
+            bad.append(f"freed slots with nonzero length: {deep}")
+        if set(self._pages) != self._used_slots:
+            bad.append("page map out of sync with used slots: "
+                       f"{sorted(set(self._pages) ^ self._used_slots)}")
         fb = set(self._free_blocks)
-        assert len(self._free_blocks) == len(fb), "duplicate pages on free list"
-        assert 0 not in fb, "scratch page leaked onto the free list"
+        if len(self._free_blocks) != len(fb):
+            bad.append("duplicate pages on free list")
+        if 0 in fb:
+            bad.append("scratch page 0 leaked onto the free list")
         refs = np.zeros(self.num_blocks, np.int32)
         for slot, pages in self._pages.items():
             ps = set(pages)
-            assert len(pages) == len(ps), f"slot {slot} double-mapped a page"
-            assert 0 not in ps, f"slot {slot} mapped the scratch page"
-            assert len(pages) >= self.pages_needed(int(self.cur_len[slot])), (
-                f"slot {slot} is deeper than its mapped pages")
+            if len(pages) != len(ps):
+                bad.append(f"slot {slot} double-mapped a page")
+            if 0 in ps:
+                bad.append(f"slot {slot} mapped the scratch page")
+            if len(pages) < self.pages_needed(int(self.cur_len[slot])):
+                bad.append(f"slot {slot} is deeper than its mapped pages")
             refs[pages] += 1
-        assert np.array_equal(refs, self._refs), "page refcounts out of sync"
+        if not np.array_equal(refs, self._refs):
+            off = np.nonzero(refs != self._refs)[0]
+            bad.append(f"page refcounts out of sync at pages {off.tolist()}")
         mapped = {p for pages in self._pages.values() for p in pages}
-        assert not (fb & mapped), "page both free and mapped"
-        assert fb | mapped == set(range(1, self.num_blocks)), "lost page"
+        if fb & mapped:
+            bad.append(f"pages both free and mapped: {sorted(fb & mapped)}")
+        leaked = set(range(1, self.num_blocks)) - (fb | mapped)
+        if leaked:
+            bad.append(f"leaked pages (neither free nor mapped): "
+                       f"{sorted(leaked)}")
+        return bad
+
+    def check_no_leaks(self) -> None:
+        report = self.leak_report()
+        assert not report, "paged pool invariants violated: " + "; ".join(report)

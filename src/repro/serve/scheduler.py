@@ -70,6 +70,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import NULL_OBS, ServeObservability
 from repro.serve.engine import ServeEngine
 from repro.serve.kv_pool import PagedKVPool, SlotKVPool
 from repro.serve.sampling import SamplingParams, request_base_key
@@ -125,6 +126,10 @@ class SchedulerConfig:
                                         # (paged only; 0 = whole-prompt)
     max_prefills: int = 4               # cap on concurrently chunking
                                         # prefills sharing that budget
+    check_leaks: bool = False           # debug: sweep the KV pool's
+                                        # alloc/refcount invariants when the
+                                        # scheduler drains; findings land in
+                                        # the obs metrics snapshot and raise
 
 
 @dataclass
@@ -149,7 +154,8 @@ class _Prefill:
 class ContinuousScheduler:
     """Drives a ServeEngine + KV pool over an online request stream."""
 
-    def __init__(self, engine: ServeEngine, cfg: Optional[SchedulerConfig] = None):
+    def __init__(self, engine: ServeEngine, cfg: Optional[SchedulerConfig] = None,
+                 obs: Optional[ServeObservability] = None):
         # default constructed here, not in the signature: a shared default
         # instance would alias across schedulers (mutable-default footgun)
         cfg = cfg if cfg is not None else SchedulerConfig()
@@ -219,6 +225,54 @@ class ContinuousScheduler:
         # (decode-only, and decode + up to _qw chunk tokens shared by every
         # in-flight prefill, dead-token padded)
         self._qw = max(1, cfg.prefill_chunk)
+        # ---- observability (repro.obs) -------------------------------
+        # NULL_OBS hands out no-op instruments, so every hook below stays
+        # branch-free and costs one attribute lookup when disabled; real
+        # instruments only ever read host scalars this scheduler already
+        # computes per tick, never anything inside jitted code — which is
+        # why metrics-on vs metrics-off token streams are bitwise equal
+        # (test-enforced, tests/test_obs.py)
+        self.obs = obs if obs is not None else NULL_OBS
+        if self.obs.metrics.enabled:
+            self.pool.attach_metrics(self.obs.metrics)
+            engine.attach_metrics(self.obs.metrics)
+        m = self.obs.metrics
+        self._m_ticks = m.counter(
+            "sched_ticks_total", "real step() calls (no idle fast-forward)")
+        self._m_tokens = m.counter(
+            "sched_tokens_emitted_total", "generated tokens streamed out")
+        self._m_submitted = m.counter(
+            "sched_requests_submitted_total", "requests entering the queue")
+        self._m_admitted = m.counter(
+            "sched_admissions_total", "queue departures (slot+pages claimed; "
+            "recomputes re-admit)")
+        self._m_finished = m.counter(
+            "sched_requests_finished_total", "requests (or sample children) "
+            "completed")
+        self._m_preempt = m.counter(
+            "sched_preemptions_total", "decode rows preempted for pages")
+        self._m_aborts = m.counter(
+            "sched_prefill_aborts_total", "in-flight prefills aborted for "
+            "pages")
+        self._m_chunks = m.counter(
+            "sched_prefill_chunks_total", "prefill chunks advanced")
+        self._m_queue = m.gauge("sched_queue_depth", "requests waiting")
+        self._m_running = m.gauge("sched_running", "decode rows in flight")
+        self._m_inflight_pf = m.gauge(
+            "sched_prefills_inflight", "prompts mid-chunking")
+        self._m_peak_running = m.gauge(
+            "sched_peak_running", "high-water decode concurrency")
+        self._m_peak_pf = m.gauge(
+            "sched_peak_prefills", "high-water concurrent prefills")
+        self._m_tick_tokens = m.histogram(
+            "sched_tick_packed_tokens", [1, 2, 4, 8, 16, 32, 64, 128, 256],
+            "real (non-dead) tokens advanced per tick")
+        self._m_tick_ms = m.histogram(
+            "sched_tick_wall_ms", [1, 2, 5, 10, 20, 50, 100, 200, 500, 1000],
+            "wall ms per tick (includes jit compiles on first shapes)")
+        self._m_leaks = m.gauge(
+            "kv_leak_findings", "drain-time pool invariant violations "
+            "(0 = clean; see ContinuousScheduler.drain_check)")
 
     @property
     def paged(self) -> bool:
@@ -259,6 +313,9 @@ class ContinuousScheduler:
         req.state = QUEUED
         req.t_submit = time.perf_counter()
         self.queue.append(req)
+        self._m_submitted.inc()
+        self._m_queue.set(len(self.queue))
+        self.obs.slo.on_submit(req, self.ticks)
 
     def _bucket(self, length: int) -> int:
         b = self.cfg.bucket_min
@@ -272,8 +329,10 @@ class ContinuousScheduler:
             req.t_first = time.perf_counter()
             if req.parent is not None and req.parent.t_first == 0.0:
                 req.parent.t_first = req.t_first
+            self.obs.slo.on_first_token(req, self.ticks)
         req.out.append(tok)
         self.tokens_emitted += 1
+        self._m_tokens.inc()
         if req.on_token is not None:
             req.on_token(req, tok)
         sp = req.sampling
@@ -288,6 +347,10 @@ class ContinuousScheduler:
         self.slot_temps[req.slot] = 0.0     # freed rows ride along as greedy
         req.state = FINISHED
         req.t_done = time.perf_counter()
+        self._m_finished.inc()
+        self.obs.slo.on_finish(req, self.ticks)
+        self.obs.tracer.instant("finish", rid=req.rid,
+                                sample=req.sample_idx, tokens=len(req.out))
         if req.parent is not None:
             self._finish_sample(req)
         else:
@@ -430,8 +493,12 @@ class ContinuousScheduler:
                 pending.append(children[i])
             else:
                 slots[i] = forked
+                self.obs.tracer.instant("fork", rid=req.rid, sample=i,
+                                        slot=forked)
         for i, child in enumerate(children):
             if i in slots:
+                if i > 0:       # sample 0 inherits the parent's admission
+                    self.obs.slo.on_admit(child, self.ticks)
                 self._install_single(child, slots[i], prefill_toks[i])
         for child in reversed(pending):
             self.queue.appendleft(child)
@@ -443,6 +510,8 @@ class ContinuousScheduler:
         s = len(toks_full)
         slot = self._alloc_slot(req, s)
         assert slot is not None
+        self._m_admitted.inc()
+        self.obs.slo.on_admit(req, self.ticks)
         bucket = self._bucket(s)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :s] = toks_full
@@ -458,6 +527,8 @@ class ContinuousScheduler:
         toks = self._prefill_tokens(req)
         slot = self._alloc_slot(req, len(toks))
         assert slot is not None
+        self._m_admitted.inc()
+        self.obs.slo.on_admit(req, self.ticks)
         self.slot_temps[slot] = 0.0     # draws armed on the final chunk only
         self._prefills.append(_Prefill(req=req, slot=slot,
                                        toks=np.asarray(toks, np.int32),
@@ -512,6 +583,9 @@ class ContinuousScheduler:
         req.state, req.slot = QUEUED, -1
         self.queue.appendleft(req)
         self.preemptions += 1
+        self._m_preempt.inc()
+        self.obs.slo.on_preempt(req, self.ticks)
+        self.obs.tracer.instant("preempt", rid=req.rid, slot=slot)
 
     def _abort_prefill(self) -> None:
         """Abort the newest in-flight prefill (the victim ordering mirrors
@@ -523,6 +597,10 @@ class ContinuousScheduler:
         pf.req.state, pf.req.slot = QUEUED, -1
         self.queue.appendleft(pf.req)
         self.preemptions += 1
+        self._m_aborts.inc()
+        self.obs.slo.on_preempt(pf.req, self.ticks)
+        self.obs.tracer.instant("abort_prefill", rid=pf.req.rid,
+                                done=pf.done, length=pf.length)
 
     def _ensure_pages(self) -> None:
         """Every running row appends one KV row this step; map each row's
@@ -565,12 +643,21 @@ class ContinuousScheduler:
         packed ragged batch of decode tokens + every in-flight prefill's
         chunk. Slots: whole-prompt admission then a separate mixed decode
         call (the comparison layout)."""
-        if self.paged:
-            self._paged_tick()
-        else:
-            self._slots_tick()
+        t0 = time.perf_counter()
+        with self.obs.tracer.span("tick", tick=self.ticks):
+            if self.paged:
+                self._paged_tick()
+            else:
+                self._slots_tick()
         self.clock += 1
         self.ticks += 1
+        self._m_ticks.inc()
+        self._m_tick_ms.observe((time.perf_counter() - t0) * 1e3)
+        self._m_queue.set(len(self.queue))
+        self._m_running.set(len(self.running))
+        self._m_inflight_pf.set(len(self._prefills))
+        self._m_peak_running.set_max(self.peak_running)
+        self._m_peak_pf.set_max(self.peak_prefills)
 
     def _split_budget(self) -> List[int]:
         """Split the tick's ``_qw``-token chunk budget across the in-flight
@@ -610,9 +697,12 @@ class ContinuousScheduler:
         into one flat list (decode rows, then every in-flight prefill's
         chunk) — padding never exceeds the static packed width, so a tick
         costs the tokens it actually advances, not ``num_slots × budget``."""
-        self._admission_tick()
+        tr = self.obs.tracer
+        with tr.span("admission", queued=len(self.queue)):
+            self._admission_tick()
         if self.running:
-            self._ensure_pages()    # may preempt rows / abort prefills
+            with tr.span("ensure_pages", rows=len(self.running)):
+                self._ensure_pages()    # may preempt rows / abort prefills
         pfs = self._prefills
         if not self.running and not pfs:
             return
@@ -628,92 +718,130 @@ class ContinuousScheduler:
         token_rows = np.zeros(T, np.int32)
         token_pos = np.full(T, -1, np.int32)     # -1 = dead padding token
         logit_idx = np.zeros(ns, np.int32)
-        t = 0
-        for slot, req in self.running.items():
-            tokens[t, 0] = self.slot_tokens[slot, 0]
-            token_rows[t] = slot
-            token_pos[t] = self.pool.cur_len[slot]
-            logit_idx[slot] = t
-            self.slot_steps[slot] = len(req.out)
-            t += 1
-        shares = self._split_budget()
-        for pf, n in zip(pfs, shares):
-            if n == 0:              # budget spent by shorter prefills
-                continue
-            lo = pf.done
-            tokens[t:t + n, 0] = pf.toks[lo:lo + n]
-            token_rows[t:t + n] = pf.slot
-            token_pos[t:t + n] = np.arange(lo, lo + n)
-            if lo + n >= pf.length:
-                logit_idx[pf.slot] = t + n - 1   # the prompt's last token
-                self._arm_first_draw(pf.req, pf.slot)
-            t += n
+        with tr.span("pack_budget_split", decode_rows=len(self.running),
+                     prefills=len(pfs), width=T):
+            t = 0
+            for slot, req in self.running.items():
+                tokens[t, 0] = self.slot_tokens[slot, 0]
+                token_rows[t] = slot
+                token_pos[t] = self.pool.cur_len[slot]
+                logit_idx[slot] = t
+                self.slot_steps[slot] = len(req.out)
+                t += 1
+            shares = self._split_budget()
+            for pf, n in zip(pfs, shares):
+                if n == 0:          # budget spent by shorter prefills
+                    continue
+                lo = pf.done
+                tokens[t:t + n, 0] = pf.toks[lo:lo + n]
+                token_rows[t:t + n] = pf.slot
+                token_pos[t:t + n] = np.arange(lo, lo + n)
+                if lo + n >= pf.length:
+                    logit_idx[pf.slot] = t + n - 1   # prompt's last token
+                    self._arm_first_draw(pf.req, pf.slot)
+                t += n
         sample = (self.slot_temps, self.slot_topk, self.slot_topp,
                   self.slot_keys, self.slot_steps)
-        toks, logits, cache = self.engine.serve_step(
-            tokens, token_rows, token_pos, logit_idx, self.pool.cache,
-            self.pool.block_tables, self.pool.task_id[token_rows], sample)
+        self._m_tick_tokens.observe(t)      # real tokens; T - t are dead
+        with tr.span("dispatch", tokens=int(t), width=T):
+            toks, logits, cache = self.engine.serve_step(
+                tokens, token_rows, token_pos, logit_idx, self.pool.cache,
+                self.pool.block_tables, self.pool.task_id[token_rows], sample)
         self.pool.cache = cache
-        active = list(self.running.items())
-        if active:
-            self.pool.advance([s for s, _ in active])
-            self.steps_decoded += 1
-            for slot, req in active:
-                tok = int(toks[slot])
-                self.slot_tokens[slot, 0] = tok
-                if self._emit(req, tok):
-                    self._finish(req)
-        still: List[_Prefill] = []
-        for pf, n in zip(pfs, shares):
-            if n == 0:
-                still.append(pf)
-                continue
-            pf.done += n
-            self.prefill_chunks_run += 1
-            if pf.done < pf.length:
-                still.append(pf)
-                continue
-            spec = self._first_sample_spec(pf.req)
-            if spec is not None and len(spec[0]) > 1:
-                # fresh n>1 parent: every sample's token 0 comes from
-                # this one prefill row, each under its own stream (the
-                # only second dispatch, and only on n>1 installs)
-                first = self.engine.sample_first(logits[pf.slot], spec)
-            else:
-                # singles drew (or argmax'd) inside serve_step itself
-                first = [int(toks[pf.slot])]
-            self._install(pf.req, pf.slot, pf.length, first)
-        self._prefills = still
+        with tr.span("postprocess"):
+            active = list(self.running.items())
+            if active:
+                self.pool.advance([s for s, _ in active])
+                self.steps_decoded += 1
+                for slot, req in active:
+                    tok = int(toks[slot])
+                    self.slot_tokens[slot, 0] = tok
+                    if self._emit(req, tok):
+                        self._finish(req)
+            still: List[_Prefill] = []
+            for pf, n in zip(pfs, shares):
+                if n == 0:
+                    still.append(pf)
+                    continue
+                pf.done += n
+                self.prefill_chunks_run += 1
+                self._m_chunks.inc()
+                if pf.done < pf.length:
+                    still.append(pf)
+                    continue
+                spec = self._first_sample_spec(pf.req)
+                if spec is not None and len(spec[0]) > 1:
+                    # fresh n>1 parent: every sample's token 0 comes from
+                    # this one prefill row, each under its own stream (the
+                    # only second dispatch, and only on n>1 installs)
+                    first = self.engine.sample_first(logits[pf.slot], spec)
+                else:
+                    # singles drew (or argmax'd) inside serve_step itself
+                    first = [int(toks[pf.slot])]
+                self._install(pf.req, pf.slot, pf.length, first)
+            self._prefills = still
         self.peak_running = max(self.peak_running, len(self.running))
+        if tr.enabled and self.paged:
+            tr.counter("pages", used=self.pool.blocks_in_use(),
+                       free=self.pool.free_blocks())
+            tr.counter("requests", running=len(self.running),
+                       queued=len(self.queue), prefills=len(self._prefills))
 
     def _slots_tick(self) -> None:
         """The contiguous-layout tick: bucketed whole-prompt admission,
         then one mixed decode call over all occupied slots."""
-        self._admission_tick()
+        tr = self.obs.tracer
+        with tr.span("admission", queued=len(self.queue)):
+            self._admission_tick()
         if self.running:
             sample = self._decode_sample_spec()
-            toks, cache = self.engine.decode_mixed(
-                self.slot_tokens, self.pool.cur_len, self.pool.cache,
-                self.pool.task_id, sample=sample)
+            self._m_tick_tokens.observe(len(self.running))
+            with tr.span("dispatch", tokens=len(self.running)):
+                toks, cache = self.engine.decode_mixed(
+                    self.slot_tokens, self.pool.cur_len, self.pool.cache,
+                    self.pool.task_id, sample=sample)
             self.pool.cache = cache
-            active = list(self.running.items())
-            self.peak_running = max(self.peak_running, len(active))
-            self.pool.advance([s for s, _ in active])
-            self.steps_decoded += 1
-            for slot, req in active:
-                tok = int(toks[slot])
-                self.slot_tokens[slot, 0] = tok
-                if self._emit(req, tok):
-                    self._finish(req)
+            with tr.span("postprocess"):
+                active = list(self.running.items())
+                self.peak_running = max(self.peak_running, len(active))
+                self.pool.advance([s for s, _ in active])
+                self.steps_decoded += 1
+                for slot, req in active:
+                    tok = int(toks[slot])
+                    self.slot_tokens[slot, 0] = tok
+                    if self._emit(req, tok):
+                        self._finish(req)
 
     def busy(self) -> bool:
         """Anything left to do: queued, decoding, or mid-prefill."""
         return bool(self.queue or self.running or self._prefills)
 
+    def drain_check(self) -> List[str]:
+        """Sweep the KV pool's alloc/refcount invariants (a drained pool
+        must have every page free and every refcount zero) and publish the
+        finding count through the metrics snapshot as ``kv_leak_findings``.
+        Returns the findings; callers behind the ``check_leaks`` debug
+        flag raise on a non-empty report so leaks in live runs fail
+        loudly instead of silently shrinking the pool."""
+        report = self.pool.leak_report()
+        self._m_leaks.set(len(report))
+        for msg in report:
+            self.obs.tracer.instant("kv_leak", finding=msg)
+        return report
+
+    def _maybe_check_leaks(self) -> None:
+        if not (self.cfg.check_leaks or self.obs.check_leaks):
+            return
+        report = self.drain_check()
+        if report:
+            raise RuntimeError(
+                "KV pool leaked at drain: " + "; ".join(report))
+
     def run(self) -> Dict[int, Request]:
         """Drain everything currently submitted."""
         while self.busy():
             self.step()
+        self._maybe_check_leaks()
         return self.finished
 
     def run_stream(self, arrivals: List[Tuple[int, Request]]) -> Dict[int, Request]:
@@ -730,4 +858,5 @@ class ContinuousScheduler:
                 self.submit(arrivals[order[i]][1])
                 i += 1
             self.step()
+        self._maybe_check_leaks()
         return self.finished
