@@ -3,9 +3,14 @@
 Loads (or fabricates, with --demo) fused AoT task tables and serves a
 continuous stream of mixed-task requests from a single frozen backbone —
 the paper's deployment story as a runnable process. Requests arrive as a
-Poisson process, pick a task at random, and stream their tokens through a
-callback as they decode; a static batched mode (--static) keeps the old
-all-arrive-together behavior for comparison.
+Poisson process (or --arrivals bursty / --arrival-trace FILE), carry a
+priority class drawn from --priority-mix, pick a task at random, and
+stream their tokens through a callback as they decode; a static batched
+mode (--static) keeps the old all-arrive-together behavior for
+comparison. Overload knobs: --max-queue bounds admission (shed requests
+are retried with exponential backoff up to --max-retries), latency-class
+requests can carry --deadline-ticks, and --grace-ticks hands the drain to
+Scheduler.shutdown. The process exits non-zero if the pool leaks.
 
     # fabricated tables, continuous stream
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
@@ -19,6 +24,8 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import heapq
+import sys
 
 import jax
 import numpy as np
@@ -29,7 +36,8 @@ from repro.models.model import Model, ModelOptions
 from repro.obs import ServeObservability
 from repro.serve.engine import ServeConfig, ServeEngine
 from repro.serve.sampling import SamplingParams
-from repro.serve.scheduler import ContinuousScheduler, Request, SchedulerConfig
+from repro.serve.scheduler import (PRIORITIES, ContinuousScheduler, Request,
+                                   SchedulerConfig, ShedError, STANDARD)
 
 
 def demo_tasks(cfg, params, n_tasks: int):
@@ -60,6 +68,112 @@ def load_tasks(cfg, directory: str):
     return tasks
 
 
+def parse_priority_mix(spec: str):
+    """``latency=0.2,standard=0.5,best_effort=0.3`` -> normalized weights
+    over the scheduler's priority classes (missing classes get 0)."""
+    weights = {c: 0.0 for c in PRIORITIES}
+    for part in spec.split(","):
+        if not part.strip():
+            continue
+        name, _, val = part.partition("=")
+        name = name.strip()
+        if name not in weights:
+            raise ValueError(f"unknown priority class {name!r} "
+                             f"(choose from {', '.join(PRIORITIES)})")
+        weights[name] = float(val)
+    total = sum(weights.values())
+    if total <= 0:
+        raise ValueError(f"priority mix {spec!r} has no positive weight")
+    return {c: w / total for c, w in weights.items()}
+
+
+def bursty_ticks(rng, n: int, burst: int, gap: int):
+    """On/off arrival process: bursts of near-simultaneous arrivals
+    separated by quiet gaps — the adversarial pattern a Poisson stream
+    (independent increments) essentially never produces, and the one that
+    actually exercises shedding, displacement, and class-aware admission."""
+    ticks, t = [], 0
+    while len(ticks) < n:
+        k = min(burst, n - len(ticks))
+        ticks.extend(t + int(rng.integers(0, 2)) for _ in range(k))
+        t += max(gap, 1)
+    return sorted(ticks[:n])
+
+
+def load_arrival_trace(path: str, n: int):
+    """Trace-driven arrivals: one line per request, ``tick[,priority]``.
+    Extra lines are ignored; if the trace is shorter than --requests the
+    run is truncated to the trace (the trace IS the workload)."""
+    ticks, prios = [], []
+    with open(path) as fh:
+        for line in fh:
+            line = line.split("#", 1)[0].strip()
+            if not line:
+                continue
+            parts = [p.strip() for p in line.split(",")]
+            ticks.append(int(parts[0]))
+            prios.append(parts[1] if len(parts) > 1 and parts[1] else None)
+            if len(ticks) == n:
+                break
+    if not ticks:
+        raise ValueError(f"arrival trace {path!r} is empty")
+    return ticks, prios
+
+
+def run_with_retries(sched, arrivals, grace_ticks: int,
+                     max_retries: int, backoff: int):
+    """Client loop: submit on each request's arrival tick; a shed request
+    is re-enqueued with exponential backoff (``backoff ** attempt`` ticks)
+    up to ``max_retries`` resubmissions. Two shed paths reach the client:
+    a ShedError raised at submit (queue full), and DISPLACEMENT — a
+    queued request evicted later by a higher-class arrival, which raises
+    nothing at the victim's own submit, so the loop scans
+    ``sched.shed`` after every tick for victims to resubmit. When the
+    stream ends, ``grace_ticks >= 0`` hands off to ``Scheduler.shutdown``
+    (graceful drain with a deadline); ``-1`` drains fully. Returns
+    ``(gave_up_rids, retries, drain_report_or_None)``."""
+    heap = [(t, i, req) for i, (t, req) in enumerate(arrivals)]
+    heapq.heapify(heap)
+    seq = len(heap)
+    attempts = {}                        # rid -> submissions so far
+    pending = {req.rid for _, _, req in heap}   # queued for (re)submit
+    gave_up, retries = [], 0
+
+    def requeue(req):
+        nonlocal seq, retries
+        if attempts[req.rid] > max_retries:
+            if req.rid not in gave_up:
+                gave_up.append(req.rid)
+            return
+        retries += 1
+        heapq.heappush(heap, (sched.clock + backoff ** (attempts[req.rid] - 1),
+                              seq, req))
+        seq += 1
+        pending.add(req.rid)
+
+    while heap:
+        if not sched.busy() and heap[0][0] > sched.clock:
+            sched.clock = heap[0][0]     # idle fast-forward, like run_stream
+        while heap and heap[0][0] <= sched.clock:
+            _, _, req = heapq.heappop(heap)
+            pending.discard(req.rid)
+            attempts[req.rid] = attempts.get(req.rid, 0) + 1
+            try:
+                sched.submit(req)
+            except ShedError:
+                requeue(req)
+        sched.step()
+        for rid in [r for r in sched.shed if r not in pending]:
+            requeue(sched.shed[rid])     # displaced victim: client resubmits
+    if grace_ticks >= 0:
+        report = sched.shutdown(grace_ticks)
+        return gave_up, retries, report
+    while sched.busy():
+        sched.step()
+    sched._maybe_check_leaks()
+    return gave_up, retries, None
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--arch", default="smollm-360m")
@@ -75,6 +189,42 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--rate", type=float, default=0.5,
                     help="mean arrivals per decode step (Poisson stream)")
+    ovl = ap.add_argument_group("overload / robustness")
+    ovl.add_argument("--arrivals", choices=("poisson", "bursty"),
+                     default="poisson",
+                     help="arrival process: poisson (independent "
+                          "increments) or bursty (on/off bursts — the "
+                          "pattern that actually exercises shedding)")
+    ovl.add_argument("--burst", type=int, default=6,
+                     help="arrivals per burst (--arrivals bursty)")
+    ovl.add_argument("--burst-gap", type=int, default=0,
+                     help="quiet ticks between bursts (0 = derive from "
+                          "--rate so the mean rate matches poisson)")
+    ovl.add_argument("--arrival-trace", metavar="FILE",
+                     help="trace-driven arrivals: one 'tick[,priority]' "
+                          "line per request (overrides --arrivals/--rate)")
+    ovl.add_argument("--priority-mix", metavar="SPEC",
+                     default="standard=1",
+                     help="request class weights, e.g. "
+                          "'latency=0.2,standard=0.5,best_effort=0.3'")
+    ovl.add_argument("--deadline-ticks", type=int, default=0,
+                     help="deadline for latency-class requests in real "
+                          "ticks; past-deadline requests are aborted and "
+                          "their pages freed (0 = no deadlines)")
+    ovl.add_argument("--max-queue", type=int, default=0,
+                     help="bounded admission queue: beyond this depth "
+                          "submissions are shed with a reason (0 = "
+                          "unbounded, never sheds)")
+    ovl.add_argument("--max-retries", type=int, default=4,
+                     help="client retries for a shed submission "
+                          "(exponential backoff, --backoff ** attempt)")
+    ovl.add_argument("--backoff", type=int, default=2,
+                     help="backoff base in ticks for shed retries")
+    ovl.add_argument("--grace-ticks", type=int, default=-1,
+                     help="graceful-drain budget handed to "
+                          "Scheduler.shutdown once the stream ends: "
+                          "in-flight work gets this many ticks, the rest "
+                          "is shed and reported (-1 = drain fully)")
     ap.add_argument("--slots", type=int, default=4,
                     help="KV-pool slots (continuous batch width)")
     ap.add_argument("--layout", choices=("paged", "slots"), default="paged",
@@ -200,18 +350,50 @@ def main():
         print(f"warning: --samples {args.samples} at --temperature 0 forks "
               f"{args.samples} identical greedy continuations")
 
-    arrivals, t = [], 0.0
+    try:
+        mix = parse_priority_mix(args.priority_mix)
+    except ValueError as e:
+        ap.error(str(e))
+    trace_prios = [None] * args.requests
+    if args.arrival_trace:
+        ticks, trace_prios = load_arrival_trace(args.arrival_trace,
+                                                args.requests)
+        if len(ticks) < args.requests:
+            print(f"arrival trace has {len(ticks)} entries; truncating "
+                  f"--requests {args.requests} to match")
+            args.requests = len(ticks)
+        print(f"trace-driven arrivals from {args.arrival_trace} "
+              f"({len(ticks)} requests)")
+    elif args.arrivals == "bursty":
+        gap = args.burst_gap or max(int(args.burst / max(args.rate, 1e-6)), 1)
+        ticks = bursty_ticks(rng, args.requests, args.burst, gap)
+        print(f"bursty arrivals: bursts of {args.burst} every {gap} ticks")
+    else:
+        ticks, t = [], 0.0
+        for _ in range(args.requests):
+            t += rng.exponential(1.0 / max(args.rate, 1e-6))
+            ticks.append(int(t))
+    classes = list(mix)
+    weights = [mix[c] for c in classes]
+    arrivals = []
     for i in range(args.requests):
-        t += rng.exponential(1.0 / max(args.rate, 1e-6))
         plen = int(rng.integers(4, args.prompt + 1))
+        prio = trace_prios[i] or str(rng.choice(classes, p=weights))
+        if prio not in PRIORITIES:
+            ap.error(f"arrival trace priority {prio!r} is not one of "
+                     f"{', '.join(PRIORITIES)}")
         req = Request(
             rid=i, prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
             task_id=int(rng.integers(0, n_tasks)),
             max_new_tokens=int(rng.integers(2, args.steps + 1)),
+            priority=prio,
+            deadline_ticks=(args.deadline_ticks
+                            if args.deadline_ticks > 0 and prio == "latency"
+                            else None),
             on_token=on_token,
             sampling=None if sampling is None
             else dataclasses.replace(sampling, seed=args.seed + i))
-        arrivals.append((int(t), req))
+        arrivals.append((ticks[i], req))
 
     if args.prefill_chunk > 0 and args.layout != "paged":
         print("warning: chunked prefill rides the unified paged serve step; "
@@ -228,12 +410,16 @@ def main():
     sched = ContinuousScheduler(eng, SchedulerConfig(
         num_slots=args.slots, kv_layout=args.layout,
         block_size=args.block_size, num_blocks=args.num_blocks,
-        prefill_chunk=args.prefill_chunk, max_prefills=args.max_prefills),
+        prefill_chunk=args.prefill_chunk, max_prefills=args.max_prefills,
+        max_queue=args.max_queue),
         obs=obs)
     if obs is not None:
         obs.tracer.start()          # no-op without --jax-profile
     try:
-        finished = sched.run_stream(arrivals)
+        shed_rids, retries, drain_report = run_with_retries(
+            sched, arrivals, grace_ticks=args.grace_ticks,
+            max_retries=args.max_retries, backoff=args.backoff)
+        finished = sched.finished
     finally:
         if obs is not None:
             obs.tracer.stop()
@@ -266,6 +452,26 @@ def main():
               f"peak concurrent prefills {sched.peak_prefills}, "
               f"{sched.preemptions} preemptions, "
               f"{pool.forks} forks, {pool.cow_copies} COW page copies")
+    if retries or shed_rids or sched.shed or sched.aborted:
+        print(f"overload: {retries} shed retries (backoff base "
+              f"{args.backoff}), {len(shed_rids)} requests gave up after "
+              f"{args.max_retries} retries "
+              f"{sorted(shed_rids) if shed_rids else ''}".rstrip())
+        if sched.deadline_misses:
+            print(f"  {sched.deadline_misses} deadline misses "
+                  f"(--deadline-ticks {args.deadline_ticks}); pages freed "
+                  "at abort")
+        if sched.aborted:
+            reasons = {}
+            for r in sched.aborted.values():
+                reasons[r.finish_reason] = reasons.get(r.finish_reason, 0) + 1
+            print(f"  aborted in flight: {dict(sorted(reasons.items()))}")
+    if drain_report is not None:
+        print(f"shutdown(grace={args.grace_ticks}): finished "
+              f"{drain_report.finished}, used {drain_report.grace_ticks_used}"
+              f" grace ticks, shed {len(drain_report.shed_rids)} in-flight "
+              f"{drain_report.shed_rids if drain_report.shed_rids else ''}"
+              .rstrip())
     if obs is not None and obs.metrics.enabled:
         summary = obs.slo.summary(
             targets={"ttft_ticks": args.slo_ttft_ticks})
@@ -286,9 +492,25 @@ def main():
                   f"p99={v['p99']:g}")
         for name, frac in summary.get("slo_attainment", {}).items():
             print(f"  attainment {name}: {frac:.1%}")
-        if sched.drain_check():
-            print("  WARNING: drain-time leak findings in metrics "
-                  "snapshot (kv_leak_findings)")
+        by_class = summary.get("by_class", {})
+        if by_class:
+            print("per-class SLO (real-tick series):")
+            for cls, s in by_class.items():
+                parts = [f"requests={s.get('requests', 0)}"]
+                for key in ("ttft_ticks", "tpot_ticks"):
+                    if key in s:
+                        parts.append(f"{key} p50={s[key]['p50']:g} "
+                                     f"p95={s[key]['p95']:g}")
+                if s.get("shed"):
+                    parts.append(f"shed={s['shed']}")
+                if s.get("aborted"):
+                    parts.append(f"aborted={s['aborted']}")
+                print(f"  {cls:>12}: " + " ".join(parts))
+                for name, frac in s.get("slo_attainment", {}).items():
+                    print(f"  {'':>12}  attainment {name}: {frac:.1%}")
+        if summary.get("sheds"):
+            print(f"  sheds: {summary['sheds']} "
+                  f"(by class: {summary.get('sheds_by_class', {})})")
         if args.metrics_out:
             obs.metrics.write_jsonl(args.metrics_out,
                                     extra={"slo": summary,
@@ -298,6 +520,19 @@ def main():
         if args.metrics:
             print("\nmetrics snapshot (prometheus text):")
             print(obs.metrics.prometheus_text())
+    # hard-fail on pool-accounting findings regardless of --metrics /
+    # --check-leaks: a leak at drain is never OK in a launcher run, and a
+    # zero exit code must mean "drained clean"
+    findings = sched.drain_check()
+    if drain_report is not None:
+        findings = sorted(set(findings) | set(drain_report.leak_findings))
+    if findings:
+        print("DRAIN FAILED: KV pool leak findings at exit:",
+              file=sys.stderr)
+        for f in findings:
+            print(f"  {f}", file=sys.stderr)
+        sys.exit(1)
+
     for rid in sorted(finished):
         req = finished[rid]
         ms = (req.t_done - req.t_submit) * 1e3

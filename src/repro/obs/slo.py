@@ -43,6 +43,9 @@ class Lifecycle:
     rid: int
     sample_idx: int = 0
     prompt_len: int = 0
+    priority: str = "standard"               # request's priority class
+    aborted: bool = False                    # cancelled, not completed
+    abort_reason: str = ""
     tokens: int = 0
     preemptions: int = 0
     admissions: int = 0                      # > 1 after preempt-recompute
@@ -106,6 +109,10 @@ class SLOTracker:
         self.enabled = enabled
         self.records: Dict[Tuple[int, int], Lifecycle] = {}
         self.finished: List[Lifecycle] = []
+        self.aborted: List[Lifecycle] = []
+        self.abort_reasons: Dict[str, int] = {}
+        self.shed_reasons: Dict[str, int] = {}
+        self.shed_by_class: Dict[str, int] = {}
 
     def _rec(self, req, tick: int) -> Lifecycle:
         key = (req.rid, req.sample_idx)
@@ -117,7 +124,9 @@ class SLOTracker:
             sw = base.submit_wall if base is not None else time.perf_counter()
             rec = self.records[key] = Lifecycle(
                 rid=req.rid, sample_idx=req.sample_idx,
-                prompt_len=len(req.prompt), submit_tick=st, submit_wall=sw)
+                prompt_len=len(req.prompt),
+                priority=getattr(req, "priority", "standard"),
+                submit_tick=st, submit_wall=sw)
         return rec
 
     # ------------------------------------------------------------------
@@ -130,8 +139,9 @@ class SLOTracker:
         if key not in self.records:
             self.records[key] = Lifecycle(
                 rid=req.rid, sample_idx=req.sample_idx,
-                prompt_len=len(req.prompt), submit_tick=tick,
-                submit_wall=time.perf_counter())
+                prompt_len=len(req.prompt),
+                priority=getattr(req, "priority", "standard"),
+                submit_tick=tick, submit_wall=time.perf_counter())
 
     def on_admit(self, req, tick: int) -> None:
         if not self.enabled:
@@ -170,17 +180,34 @@ class SLOTracker:
             rec.admit_tick, rec.admit_wall = rec.first_tick, rec.first_wall
         self.finished.append(rec)
 
+    def on_shed(self, req, tick: int, reason: str) -> None:
+        """The bounded queue refused (or displaced) a submission."""
+        if not self.enabled:
+            return
+        self.shed_reasons[reason] = self.shed_reasons.get(reason, 0) + 1
+        cls = getattr(req, "priority", "standard")
+        self.shed_by_class[cls] = self.shed_by_class.get(cls, 0) + 1
+
+    def on_abort(self, req, tick: int, reason: str) -> None:
+        """A live request was cancelled (client abort, disconnect,
+        deadline miss, or shutdown) — recorded separately from finishes
+        so percentiles only ever aggregate completed requests."""
+        if not self.enabled:
+            return
+        rec = self._rec(req, tick)
+        rec.aborted = True
+        rec.abort_reason = reason
+        rec.done_tick = tick
+        rec.done_wall = time.perf_counter()
+        self.aborted.append(rec)
+        self.abort_reasons[reason] = self.abort_reasons.get(reason, 0) + 1
+
     # ------------------------------------------------------------------
     # aggregation
     # ------------------------------------------------------------------
-    def summary(self, targets: Optional[Dict[str, float]] = None) -> dict:
-        """p50/p95/p99 of every lifecycle interval, tick and wall series
-        reported side by side but never mixed, plus SLO attainment for
-        ``targets`` ({metric_name: threshold}, metric names as in the
-        output: ``ttft_ticks``, ``ttft_ms``, ``tpot_ticks``, ``tpot_ms``,
-        ``e2e_ticks``, ``e2e_ms``, ``queue_wait_ticks``)."""
-        fin = self.finished
-        series: Dict[str, List[float]] = {
+    @staticmethod
+    def _series(fin: List[Lifecycle]) -> Dict[str, List[float]]:
+        return {
             "queue_wait_ticks": [r.queue_wait_ticks() for r in fin],
             "ttft_ticks": [r.ttft_ticks() for r in fin],
             "ttft_ms": [r.ttft_ms() for r in fin],
@@ -190,21 +217,73 @@ class SLOTracker:
             "e2e_ticks": [r.e2e_ticks() for r in fin],
             "e2e_ms": [r.e2e_ms() for r in fin],
         }
+
+    @staticmethod
+    def _attainment(series: Dict[str, List[float]],
+                    targets: Dict[str, float]) -> Dict[str, float]:
+        att = {}
+        for name, limit in targets.items():
+            vals = series.get(name)
+            if not vals:
+                continue
+            ok = sum(1 for v in vals if v <= limit)
+            att[f"{name}<={limit:g}"] = round(ok / len(vals), 4)
+        return att
+
+    def summary(self, targets: Optional[Dict[str, float]] = None) -> dict:
+        """p50/p95/p99 of every lifecycle interval, tick and wall series
+        reported side by side but never mixed, plus SLO attainment for
+        ``targets`` ({metric_name: threshold}, metric names as in the
+        output: ``ttft_ticks``, ``ttft_ms``, ``tpot_ticks``, ``tpot_ms``,
+        ``e2e_ticks``, ``e2e_ms``, ``queue_wait_ticks``). When more than
+        one priority class finished requests, ``by_class`` repeats the
+        tick-series percentiles (and attainment) per class — the
+        machine-checkable form of "latency class meets its SLO at
+        best-effort's expense, not silently" — and shed/abort counts are
+        reported by reason (percentiles only ever aggregate COMPLETED
+        requests; aborted and shed work is counted, never averaged in)."""
+        fin = self.finished
+        series = self._series(fin)
         out: dict = {
             "requests": len(fin),
             "tokens": sum(r.tokens for r in fin),
             "preemptions": sum(r.preemptions for r in fin),
             "readmissions": sum(max(0, r.admissions - 1) for r in fin),
         }
+        if self.shed_reasons:
+            out["sheds"] = dict(sorted(self.shed_reasons.items()))
+            out["sheds_by_class"] = dict(sorted(self.shed_by_class.items()))
+        if self.abort_reasons:
+            out["aborts"] = dict(sorted(self.abort_reasons.items()))
         for name, vals in series.items():
             out[name] = _pctls(vals)
         if targets:
-            att = {}
-            for name, limit in targets.items():
-                vals = series.get(name)
-                if not vals:
-                    continue
-                ok = sum(1 for v in vals if v <= limit)
-                att[f"{name}<={limit:g}"] = round(ok / len(vals), 4)
-            out["slo_attainment"] = att
+            out["slo_attainment"] = self._attainment(series, targets)
+        # union over finished, shed, and aborted: a class that finished
+        # nothing (fully shed under overload) must still show up — its
+        # absence from the report is exactly the signal being measured
+        classes = sorted({r.priority for r in fin}
+                         | set(self.shed_by_class)
+                         | {r.priority for r in self.aborted})
+        if len(classes) > 1 or self.shed_by_class or self.aborted:
+            by_class = {}
+            for cls in classes:
+                cfin = [r for r in fin if r.priority == cls]
+                cseries = self._series(cfin)
+                entry = {
+                    "requests": len(cfin),
+                    "tokens": sum(r.tokens for r in cfin),
+                    "preemptions": sum(r.preemptions for r in cfin),
+                    "aborted": sum(1 for r in self.aborted
+                                   if r.priority == cls),
+                    "shed": self.shed_by_class.get(cls, 0),
+                }
+                for name in ("queue_wait_ticks", "ttft_ticks", "tpot_ticks",
+                             "e2e_ticks", "ttft_ms", "tpot_ms"):
+                    entry[name] = _pctls(cseries[name])
+                if targets:
+                    entry["slo_attainment"] = self._attainment(
+                        cseries, targets)
+                by_class[cls] = entry
+            out["by_class"] = by_class
         return out

@@ -64,9 +64,13 @@ class ServeEngine:
                 method="aot", aot=aot_mod.AoTOptions(mode="fused"))
             self.peft = peft_mod.make({"aot": stacked}, opt)
             self.multitask = True
+            # task-id validity bound: the scheduler rejects submissions
+            # whose task_id a fused-table gather would silently clamp/wrap
+            self.num_tasks: Optional[int] = len(fused_tasks)
         else:
             self.peft = peft
             self.multitask = False
+            self.num_tasks = None
         # KV allocations round up so the Pallas decode kernel never hits its
         # pad-and-copy fallback (S % block_k != 0); rows past cfg.max_len
         # stay masked by cur_len forever.

@@ -1,0 +1,215 @@
+"""Deterministic fault injection for the serving path.
+
+A :class:`FaultPlan` is a *seeded, precomputed* schedule of faults — which
+tick gets which fault is fixed at construction, so a chaos run is exactly
+reproducible from ``(seed, horizon, rates)`` and a failing soak seed can be
+replayed in a debugger. Four fault kinds, each exercising real overload
+machinery rather than mocks:
+
+  * ``exhaust`` — :meth:`PagedKVPool.seize_pages` pulls pages off the free
+    list for a few ticks, so admission backpressure, decode preemption,
+    prefill aborts, and (at total exhaustion) the last row's self-preempt
+    all fire exactly as they would under genuine memory pressure.
+  * ``straggler`` — a host-side stall (``time.sleep``) before the tick:
+    wall-clock series degrade, tick series and tokens must not.
+  * ``disconnect`` — a mid-stream client abort of a live request picked by
+    the plan's own seeded uniform draw, through the public
+    :meth:`ContinuousScheduler.abort` (queued / mid-prefill / mid-decode /
+    forked — whatever state the victim happens to be in).
+  * ``malformed`` — a garbage submission (empty prompt, ``n=0``,
+    ``max_tokens=0``, unknown task id, NaN temperature) that MUST be
+    rejected with :class:`InvalidRequest` and leave no state behind.
+
+The chaos invariants (test-enforced in tests/test_robustness.py): the
+scheduler always drains, ``leak_report()`` comes back empty, and every
+SURVIVING request's token stream is bitwise identical to a fault-free run
+of the same arrivals — preempt-and-recompute is exact and every sample's
+RNG stream is counter-based, so no amount of eviction, stalling, or
+neighbor churn may change anyone's tokens.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.sampling import SamplingParams
+
+FAULT_KINDS = ("exhaust", "straggler", "disconnect", "malformed")
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault. ``u`` is the event's own seeded uniform draw,
+    used where the fault needs a choice (disconnect victim, malformed
+    variant) so the schedule stays a pure function of the plan."""
+    tick: int
+    kind: str                           # one of FAULT_KINDS
+    u: float = 0.0
+    pages: int = 0                      # exhaust: pages to seize
+    dur: int = 0                        # exhaust: ticks until restore
+
+
+@dataclass
+class FaultPlan:
+    """Seeded fault schedule over ``horizon`` ticks. Per-tick rates are
+    independent Bernoulli draws from one ``numpy`` generator, so the full
+    schedule — including every victim choice — is determined by the
+    constructor arguments alone."""
+    seed: int = 0
+    horizon: int = 128
+    p_exhaust: float = 0.05
+    exhaust_pages: int = 6
+    exhaust_ticks: int = 4
+    p_straggler: float = 0.04
+    straggler_ms: float = 1.0
+    p_disconnect: float = 0.03
+    p_malformed: float = 0.04
+    protect_rids: Tuple[int, ...] = ()  # rids disconnects must never take
+    _events: Optional[List[FaultEvent]] = field(default=None, repr=False)
+
+    def events(self) -> List[FaultEvent]:
+        if self._events is None:
+            rng = np.random.default_rng(self.seed)
+            evs: List[FaultEvent] = []
+            for t in range(self.horizon):
+                draws = rng.random(5)
+                if draws[0] < self.p_exhaust:
+                    evs.append(FaultEvent(t, "exhaust",
+                                          pages=self.exhaust_pages,
+                                          dur=self.exhaust_ticks))
+                if draws[1] < self.p_straggler:
+                    evs.append(FaultEvent(t, "straggler"))
+                if draws[2] < self.p_disconnect:
+                    evs.append(FaultEvent(t, "disconnect", u=draws[4]))
+                if draws[3] < self.p_malformed:
+                    evs.append(FaultEvent(t, "malformed", u=draws[4]))
+            self._events = evs
+        return self._events
+
+
+def _malformed_request(rid: int, variant: int):
+    """A submission that must bounce off validation. Imported lazily to
+    dodge the scheduler<->faults import cycle."""
+    from repro.serve.scheduler import Request
+    prompt = np.asarray([1, 2, 3], np.int32)
+    if variant == 0:
+        return Request(rid=rid, prompt=np.asarray([], np.int32))
+    if variant == 1:
+        return Request(rid=rid, prompt=prompt, max_new_tokens=0)
+    if variant == 2:
+        return Request(rid=rid, prompt=prompt, task_id=10 ** 6)
+    if variant == 3:
+        return Request(rid=rid, prompt=prompt,
+                       sampling=SamplingParams(temperature=float("nan")))
+    return Request(rid=rid, prompt=prompt, sampling=SamplingParams(n=0))
+
+
+class FaultInjector:
+    """Applies a :class:`FaultPlan` to a scheduler at tick boundaries.
+
+    Call :meth:`before_tick` right before each ``sched.step()`` and
+    :meth:`finish` after the drain (it restores any pages a trailing
+    exhaustion still holds — a forgotten restore is a leak-report finding
+    by design). ``applied`` counts events that actually fired, so a soak
+    test can assert each fault kind was exercised, not just scheduled."""
+
+    def __init__(self, sched, plan: FaultPlan):
+        self.sched = sched
+        self.plan = plan
+        self._by_tick: Dict[int, List[FaultEvent]] = {}
+        for ev in plan.events():
+            self._by_tick.setdefault(ev.tick, []).append(ev)
+        self._held: List[Tuple[int, List[int]]] = []   # (release_tick, pages)
+        self.applied: Dict[str, int] = {k: 0 for k in FAULT_KINDS}
+        self.disconnected: List[int] = []
+        self.malformed_ok = True
+        self._bad_rid = -1                             # rids for garbage
+                                                       # submissions, disjoint
+                                                       # from real traffic
+
+    # ------------------------------------------------------------------
+    def before_tick(self) -> None:
+        from repro.serve.scheduler import InvalidRequest
+        sched = self.sched
+        t = sched.ticks
+        still: List[Tuple[int, List[int]]] = []
+        for release, pages in self._held:
+            if t >= release:
+                sched.pool.restore_pages(pages)
+            else:
+                still.append((release, pages))
+        self._held = still
+        for ev in self._by_tick.get(t, ()):
+            if ev.kind == "exhaust":
+                if not hasattr(sched.pool, "seize_pages"):
+                    continue        # slots layout: no page pool to squeeze
+                pages = sched.pool.seize_pages(ev.pages)
+                if pages:
+                    self._held.append((t + ev.dur, pages))
+                    self.applied["exhaust"] += 1
+            elif ev.kind == "straggler":
+                time.sleep(self.plan.straggler_ms / 1e3)
+                self.applied["straggler"] += 1
+            elif ev.kind == "disconnect":
+                rid = self._pick_victim(ev.u)
+                if rid is not None:
+                    sched.abort(rid, reason="disconnect")
+                    self.disconnected.append(rid)
+                    self.applied["disconnect"] += 1
+            elif ev.kind == "malformed":
+                req = _malformed_request(self._bad_rid, int(ev.u * 5) % 5)
+                self._bad_rid -= 1
+                try:
+                    sched.submit(req)
+                    self.malformed_ok = False          # validation hole!
+                except InvalidRequest:
+                    self.applied["malformed"] += 1
+
+    def _pick_victim(self, u: float) -> Optional[int]:
+        sched = self.sched
+        live = sorted(({r.rid for r in sched.queue}
+                       | {pf.req.rid for pf in sched._prefills}
+                       | {r.rid for r in sched.running.values()})
+                      - set(self.plan.protect_rids))
+        if not live:
+            return None
+        return live[int(u * len(live)) % len(live)]
+
+    def finish(self) -> None:
+        for _, pages in self._held:
+            self.sched.pool.restore_pages(pages)
+        self._held = []
+
+
+def run_chaos(sched, arrivals, plan: FaultPlan) -> dict:
+    """Serve a timed arrival stream under a fault plan — the chaos-soak
+    driver. Mirrors :meth:`ContinuousScheduler.run_stream` tick for tick
+    (same arrival clock, same idle fast-forward) with
+    :meth:`FaultInjector.before_tick` applied at every tick boundary.
+
+    Returns ``{"finished", "injector", "shed_rids", "leak_findings"}`` —
+    the caller asserts drain/leak/parity invariants on these."""
+    from repro.serve.scheduler import ShedError
+    inj = FaultInjector(sched, plan)
+    shed_rids: List[int] = []
+    order = sorted(range(len(arrivals)), key=lambda i: arrivals[i][0])
+    i = 0
+    while i < len(order) or sched.busy():
+        if (not sched.busy() and i < len(order)
+                and arrivals[order[i]][0] > sched.clock):
+            sched.clock = arrivals[order[i]][0]
+        while i < len(order) and arrivals[order[i]][0] <= sched.clock:
+            try:
+                sched.submit(arrivals[order[i]][1])
+            except ShedError:
+                shed_rids.append(arrivals[order[i]][1].rid)
+            i += 1
+        inj.before_tick()
+        sched.step()
+    inj.finish()
+    findings = sched.drain_check()
+    return {"finished": sched.finished, "injector": inj,
+            "shed_rids": shed_rids, "leak_findings": findings}

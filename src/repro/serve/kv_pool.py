@@ -267,6 +267,7 @@ class PagedKVPool:
         self.forks = 0
         self.cow_copies = 0
         self.peak_pages = 0                 # high-water blocks_in_use
+        self._seized: Set[int] = set()      # pages held by fault injection
         self._m = None                      # optional obs instruments
 
     # ------------------------------------------------------------------
@@ -326,6 +327,10 @@ class PagedKVPool:
 
     def pages_needed(self, tokens: int) -> int:
         return -(-tokens // self.block_size)
+
+    def num_seized(self) -> int:
+        """Pages currently held by fault injection (see seize_pages)."""
+        return len(self._seized)
 
     def can_claim(self, npages: int, reserve: int = 0) -> bool:
         """True when ``npages`` pages can be claimed while leaving at least
@@ -429,6 +434,29 @@ class PagedKVPool:
             self._m["claimed"].inc()
         self._gauge_sync()
         return True
+
+    def seize_pages(self, n: int) -> List[int]:
+        """Fault injection: pull up to ``n`` pages off the free list so the
+        pool looks exhausted to the scheduler (admission backpressure,
+        preemption, prefill aborts — the real overload machinery, not a
+        mock). Seized pages hold no KV and are never mapped; give them
+        back with :meth:`restore_pages`. A drain-time
+        :meth:`leak_report` counts still-seized pages as a finding, so a
+        fault plan that forgets to restore fails loudly."""
+        take = min(max(n, 0), len(self._free_blocks))
+        pages = [self._free_blocks.pop() for _ in range(take)]
+        self._seized.update(pages)
+        self._gauge_sync()
+        return pages
+
+    def restore_pages(self, pages: List[int]) -> None:
+        """Return pages taken by :meth:`seize_pages` to the free list."""
+        for p in pages:
+            if p not in self._seized:
+                raise ValueError(f"page {p} was not seized")
+            self._seized.remove(p)
+            self._free_blocks.append(p)
+        self._gauge_sync()
 
     def free(self, slot: int) -> None:
         if slot not in self._used_slots:
@@ -535,7 +563,13 @@ class PagedKVPool:
         mapped = {p for pages in self._pages.values() for p in pages}
         if fb & mapped:
             bad.append(f"pages both free and mapped: {sorted(fb & mapped)}")
-        leaked = set(range(1, self.num_blocks)) - (fb | mapped)
+        if self._seized & (fb | mapped):
+            bad.append(f"seized pages also free or mapped: "
+                       f"{sorted(self._seized & (fb | mapped))}")
+        if self._seized:
+            bad.append(f"pages still seized by fault injection: "
+                       f"{sorted(self._seized)}")
+        leaked = set(range(1, self.num_blocks)) - (fb | mapped | self._seized)
         if leaked:
             bad.append(f"leaked pages (neither free nor mapped): "
                        f"{sorted(leaked)}")

@@ -30,6 +30,7 @@ set to the dtype minimum before ``jax.random.categorical``.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from functools import lru_cache
 from typing import Optional, Tuple
@@ -67,6 +68,14 @@ class SamplingParams:
         return self.temperature <= 0.0
 
     def validate(self) -> None:
+        # NaN fails every comparison, so range checks alone would wave a
+        # NaN temperature straight into the jitted sampling step — check
+        # finiteness explicitly
+        if not math.isfinite(self.temperature):
+            raise ValueError(
+                f"temperature must be finite (got {self.temperature})")
+        if not math.isfinite(self.top_p):
+            raise ValueError(f"top_p must be finite (got {self.top_p})")
         if self.temperature < 0.0:
             raise ValueError(f"temperature must be >= 0 (got {self.temperature})")
         if self.top_k < 0:

@@ -76,6 +76,97 @@ from repro.serve.kv_pool import PagedKVPool, SlotKVPool
 from repro.serve.sampling import SamplingParams, request_base_key
 
 QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
+ABORTED, SHED = "aborted", "shed"
+
+# Priority classes, best first. Admission is strict-priority across classes
+# (FIFO within a class), the per-tick prefill budget guarantees the oldest
+# prefill of EACH class a slice (the PR 5 no-starvation guarantee, per
+# class), and page-pressure victims are chosen worst-class-first so a
+# latency request reclaims pages from best-effort decode rows before it
+# ever touches a peer.
+LATENCY, STANDARD, BEST_EFFORT = "latency", "standard", "best_effort"
+PRIORITIES = (LATENCY, STANDARD, BEST_EFFORT)
+PRIORITY_RANK = {c: i for i, c in enumerate(PRIORITIES)}
+
+
+class InvalidRequest(ValueError):
+    """A malformed submission, rejected at ``submit()`` before it can claim
+    a slot, pages, or a place in the queue — never deep inside a tick.
+    Subclasses ValueError so pre-existing callers' handlers keep working."""
+
+
+class ShedError(RuntimeError):
+    """The scheduler refused an admissible request: the bounded queue is
+    full (``reason="queue_full"``), a higher class displaced it
+    (``"displaced"``), or the scheduler is draining (``"shutting_down"``).
+    Explicit rejection is the overload contract — clients retry with
+    backoff instead of the queue growing without bound."""
+
+    def __init__(self, rid: int, reason: str):
+        super().__init__(f"request {rid} shed: {reason}")
+        self.rid = rid
+        self.reason = reason
+
+
+class _ClassQueues:
+    """Admission queue partitioned by priority class: strict priority
+    across classes, FIFO within one. Mirrors the deque surface the
+    scheduler already leans on (``len``, ``[0]``, ``append``,
+    ``appendleft``, ``popleft``, iteration) so every existing call site
+    reads unchanged — ``appendleft`` fronts the request's OWN class, which
+    is how preempted/recomputing requests keep their place without jumping
+    a class they don't belong to."""
+
+    def __init__(self):
+        self._q: Dict[str, deque] = {c: deque() for c in PRIORITIES}
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._q.values())
+
+    def __bool__(self) -> bool:
+        return any(self._q.values())
+
+    def __iter__(self):
+        for c in PRIORITIES:
+            yield from self._q[c]
+
+    def __getitem__(self, i: int) -> "Request":
+        if i != 0:
+            raise IndexError("class queue exposes only the head")
+        for c in PRIORITIES:
+            if self._q[c]:
+                return self._q[c][0]
+        raise IndexError("empty queue")
+
+    def append(self, req: "Request") -> None:
+        self._q[req.priority].append(req)
+
+    def appendleft(self, req: "Request") -> None:
+        self._q[req.priority].appendleft(req)
+
+    def popleft(self) -> "Request":
+        for c in PRIORITIES:
+            if self._q[c]:
+                return self._q[c].popleft()
+        raise IndexError("empty queue")
+
+    def remove(self, req: "Request") -> None:
+        # identity scan: Request's dataclass __eq__ would compare numpy
+        # prompt arrays (ambiguous truth value), so deque.remove is out
+        q = self._q[req.priority]
+        for i, r in enumerate(q):
+            if r is req:
+                del q[i]
+                return
+        raise ValueError(f"request {req.rid} is not queued")
+
+    def worst(self) -> Optional["Request"]:
+        """Displacement victim: the NEWEST request of the worst non-empty
+        class (mirrors preemption's newest-first ordering)."""
+        for c in reversed(PRIORITIES):
+            if self._q[c]:
+                return self._q[c][-1]
+        return None
 
 
 @dataclass
@@ -95,10 +186,16 @@ class Request:
     eos_id: Optional[int] = None
     on_token: Optional[Callable[["Request", int], None]] = None
     sampling: Optional[SamplingParams] = None
+    priority: str = STANDARD            # latency | standard | best_effort
+    deadline_ticks: Optional[int] = None  # abort if not finished within this
+                                          # many ticks of submission
     # filled in by the scheduler
     out: List[int] = field(default_factory=list)
     state: str = QUEUED
     slot: int = -1
+    finish_reason: str = ""             # "" (completed) | deadline | client |
+                                        # disconnect | shutdown | shed reason
+    submit_tick: int = 0                # scheduler tick at submit (deadlines)
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
@@ -126,6 +223,11 @@ class SchedulerConfig:
                                         # (paged only; 0 = whole-prompt)
     max_prefills: int = 4               # cap on concurrently chunking
                                         # prefills sharing that budget
+    max_queue: int = 0                  # bounded admission queue: submits
+                                        # beyond this many waiters are SHED
+                                        # (ShedError) unless they outrank
+                                        # and displace a queued request
+                                        # (0 = unbounded, the old behavior)
     check_leaks: bool = False           # debug: sweep the KV pool's
                                         # alloc/refcount invariants when the
                                         # scheduler drains; findings land in
@@ -149,6 +251,19 @@ class _Prefill:
     @property
     def remaining(self) -> int:
         return self.length - self.done
+
+
+@dataclass
+class DrainReport:
+    """What :meth:`ContinuousScheduler.shutdown` did with in-flight work."""
+    finished: int                       # requests completed overall
+    shed_rids: List[int]                # rids aborted when grace expired
+    grace_ticks_used: int               # ticks spent draining
+    leak_findings: List[str]            # pool invariant sweep (empty = clean)
+
+    @property
+    def clean(self) -> bool:
+        return not self.leak_findings
 
 
 class ContinuousScheduler:
@@ -196,9 +311,17 @@ class ContinuousScheduler:
                 num_blocks=cfg.num_blocks or None)
         else:
             self.pool = SlotKVPool(engine.model, cfg.num_slots, self.max_len)
-        self.queue: deque = deque()
+        self.queue = _ClassQueues()
         self.running: Dict[int, Request] = {}        # slot -> request
         self.finished: Dict[int, Request] = {}       # rid -> request
+        self.aborted: Dict[int, Request] = {}        # rid -> request (client
+                                                     # abort / deadline /
+                                                     # disconnect / shutdown)
+        self.shed: Dict[int, Request] = {}           # rid -> request refused
+                                                     # or displaced from the
+                                                     # bounded queue
+        self.deadline_misses = 0
+        self._draining = False
         self.slot_tokens = np.zeros((cfg.num_slots, 1), np.int32)
         # per-slot sampling vectors, threaded into the jitted decode step
         self.slot_temps = np.zeros(cfg.num_slots, np.float32)
@@ -273,6 +396,20 @@ class ContinuousScheduler:
         self._m_leaks = m.gauge(
             "kv_leak_findings", "drain-time pool invariant violations "
             "(0 = clean; see ContinuousScheduler.drain_check)")
+        self._m_shed = m.counter(
+            "sched_shed_total", "submissions refused or displaced from the "
+            "bounded queue (see sched_shed_<reason>_total)")
+        self._m_client_aborts = m.counter(
+            "sched_aborts_total", "requests cancelled via abort() — client "
+            "aborts, disconnects, deadline misses, shutdown sheds")
+        self._m_deadline = m.counter(
+            "sched_deadline_misses_total", "requests aborted past their "
+            "deadline_ticks budget")
+        self._m_invalid = m.counter(
+            "sched_invalid_requests_total", "submissions rejected by "
+            "validation (InvalidRequest)")
+        self._m_draining = m.gauge(
+            "sched_draining", "1 while shutdown() drains (submits shed)")
 
     @property
     def paged(self) -> bool:
@@ -289,29 +426,91 @@ class ContinuousScheduler:
             return np.zeros(2, np.uint32)
         return request_base_key(req.sampling.seed, req.sample_idx)
 
-    def submit(self, req: Request) -> None:
-        s = len(req.prompt)
-        assert s >= 1, "empty prompt"
+    def _validate(self, req: Request) -> None:
+        """Reject malformed submissions up front (InvalidRequest) instead
+        of letting them fail slots-deep inside a jitted tick."""
+        prompt = np.asarray(req.prompt)
+        if prompt.ndim != 1 or len(prompt) < 1:
+            raise InvalidRequest(f"request {req.rid}: empty prompt")
+        if req.priority not in PRIORITY_RANK:
+            raise InvalidRequest(
+                f"request {req.rid}: unknown priority {req.priority!r} "
+                f"(one of {PRIORITIES})")
+        if req.deadline_ticks is not None and req.deadline_ticks < 1:
+            raise InvalidRequest(
+                f"request {req.rid}: deadline_ticks must be >= 1 "
+                f"(got {req.deadline_ticks})")
+        num_tasks = getattr(self.engine, "num_tasks", None)
+        if num_tasks is not None and not 0 <= req.task_id < num_tasks:
+            raise InvalidRequest(
+                f"request {req.rid}: unknown task id {req.task_id} "
+                f"(engine fuses {num_tasks} tasks)")
         sp = req.sampling
         if sp is not None:
-            sp.validate()
+            try:
+                sp.validate()
+            except ValueError as e:
+                raise InvalidRequest(f"request {req.rid}: {e}") from e
             if sp.n > 1 and not self.paged:
-                raise ValueError(
+                raise InvalidRequest(
                     f"request {req.rid}: n={sp.n} parallel samples need "
                     "kv_layout='paged' (COW page forking)")
         max_new = self._max_new(req)
         if max_new < 1:
-            raise ValueError(
+            raise InvalidRequest(
                 f"request {req.rid}: max_new_tokens must be >= 1 "
                 f"(got {max_new})")
         # the last generated token is emitted without being fed back, so the
         # deepest KV row written is prompt + max_new - 2
+        s = len(prompt)
         if s + max_new - 1 > self.max_len:
-            raise ValueError(
+            raise InvalidRequest(
                 f"request {req.rid}: prompt {s} + {max_new} new "
                 f"tokens does not fit max_len {self.max_len}")
+
+    def _shed(self, req: Request, reason: str) -> None:
+        req.state = SHED
+        req.finish_reason = reason
+        self.shed[req.rid] = req
+        self._m_shed.inc()
+        self.obs.metrics.counter(
+            f"sched_shed_{reason}_total",
+            f"submissions shed with reason={reason}").inc()
+        self.obs.slo.on_shed(req, self.ticks, reason)
+        self.obs.tracer.instant("shed", rid=req.rid, reason=reason,
+                                priority=req.priority)
+
+    def submit(self, req: Request) -> None:
+        """Validate and enqueue. Raises :class:`InvalidRequest` on a
+        malformed request and :class:`ShedError` when the bounded queue
+        refuses it (queue full and nothing worse to displace, or the
+        scheduler is draining). A shed request is recorded in
+        ``self.shed`` with its reason; a higher-class submission instead
+        DISPLACES the newest worst-class waiter (that victim lands in
+        ``self.shed`` with reason ``"displaced"`` for the client's
+        retry policy to pick up)."""
+        try:
+            self._validate(req)
+        except InvalidRequest:
+            self._m_invalid.inc()
+            raise
+        if self._draining:
+            self._shed(req, "shutting_down")
+            raise ShedError(req.rid, "shutting_down")
+        if self.cfg.max_queue and len(self.queue) >= self.cfg.max_queue:
+            victim = self.queue.worst()
+            if victim is not None and (PRIORITY_RANK[req.priority]
+                                       < PRIORITY_RANK[victim.priority]):
+                self.queue.remove(victim)
+                self._shed(victim, "displaced")
+            else:
+                self._shed(req, "queue_full")
+                raise ShedError(req.rid, "queue_full")
         req.state = QUEUED
+        req.finish_reason = ""
+        req.submit_tick = self.ticks
         req.t_submit = time.perf_counter()
+        self.shed.pop(req.rid, None)    # resubmit after a shed: back in play
         self.queue.append(req)
         self._m_submitted.inc()
         self._m_queue.set(len(self.queue))
@@ -434,8 +633,10 @@ class ContinuousScheduler:
             rid=parent.rid, prompt=parent.prompt, task_id=parent.task_id,
             max_new_tokens=parent.max_new_tokens, eos_id=parent.eos_id,
             on_token=parent.on_token, sampling=parent.sampling,
+            priority=parent.priority, deadline_ticks=parent.deadline_ticks,
             parent=parent, sample_idx=i)
         child.t_submit = parent.t_submit
+        child.submit_tick = parent.submit_tick
         return child
 
     def _install_single(self, req: Request, slot: int, tok: int) -> None:
@@ -552,6 +753,26 @@ class ContinuousScheduler:
         self.slot_keys[slot] = self._base_key(req)
         self.slot_steps[slot] = 0
 
+    def _preempt_for_admission(self, head: Request) -> bool:
+        """A blocked queue head may reclaim pages from a STRICTLY worse
+        class's decode row (worst class, newest admission first) — this is
+        how a latency request gets pages off best-effort rows instead of
+        waiting out their decode. The oldest admitted row of every class
+        is protected, so admission pressure can delay but never starve an
+        already-admitted request: per class, someone always finishes.
+        Returns True if a row was preempted (admission should re-check)."""
+        if not self.paged:
+            return False
+        rank = PRIORITY_RANK[head.priority]
+        protected = self._protected_slots()
+        victims = [s for s, req in self.running.items()
+                   if PRIORITY_RANK[req.priority] > rank
+                   and s not in protected]
+        if not victims:
+            return False
+        self._preempt(max(victims, key=self._victim_key))
+        return True
+
     def _admission_tick(self) -> None:
         if self.cfg.prefill_chunk > 0:
             # starting a chunked prefill is pure host bookkeeping; up to
@@ -559,16 +780,22 @@ class ContinuousScheduler:
             # single serve_step call each tick, so long prompts never
             # stall running requests, never serialize queued prompts
             # behind them, and never cost a dispatch
-            while (len(self._prefills) < self.cfg.max_prefills
-                   and self.queue and self._can_admit_chunked(self.queue[0])):
-                self._start_chunked(self.queue.popleft())
+            while len(self._prefills) < self.cfg.max_prefills and self.queue:
+                head = self.queue[0]
+                if self._can_admit_chunked(head):
+                    self._start_chunked(self.queue.popleft())
+                elif not self._preempt_for_admission(head):
+                    break
             return
         lim = self.cfg.admit_per_step or self.cfg.num_slots
         admitted = 0
-        while (self.queue and admitted < lim
-               and self._can_admit(self.queue[0])):
-            self._admit_whole(self.queue.popleft())
-            admitted += 1
+        while self.queue and admitted < lim:
+            head = self.queue[0]
+            if self._can_admit(head):
+                self._admit_whole(self.queue.popleft())
+                admitted += 1
+            elif not (self.paged and self._preempt_for_admission(head)):
+                break
 
     # ------------------------------------------------------------------
     # page backpressure (paged layout only)
@@ -588,10 +815,15 @@ class ContinuousScheduler:
         self.obs.tracer.instant("preempt", rid=req.rid, slot=slot)
 
     def _abort_prefill(self) -> None:
-        """Abort the newest in-flight prefill (the victim ordering mirrors
-        preemption: oldest admissions keep their pages and make progress),
-        freeing its pages and requeueing it at the queue head."""
-        pf = self._prefills.pop()
+        """Abort an in-flight prefill for pages — the NEWEST of the WORST
+        class present (the victim ordering mirrors preemption: better
+        classes and older admissions keep their pages and make progress),
+        freeing its pages and requeueing it at its class queue's head."""
+        k = max(range(len(self._prefills)),
+                key=lambda i: (PRIORITY_RANK[self._prefills[i].req.priority],
+                               i))
+        pf = self._prefills[k]
+        self._prefills = self._prefills[:k] + self._prefills[k + 1:]
         self.pool.free(pf.slot)
         self.slot_temps[pf.slot] = 0.0
         pf.req.state, pf.req.slot = QUEUED, -1
@@ -602,19 +834,69 @@ class ContinuousScheduler:
         self.obs.tracer.instant("abort_prefill", rid=pf.req.rid,
                                 done=pf.done, length=pf.length)
 
+    def _victim_key(self, slot: int):
+        """Page-pressure victim ordering over running rows: worst priority
+        class first, newest admission within a class — latency rows
+        reclaim pages from best-effort decode before touching a peer, and
+        the oldest row of each class outlives every younger classmate."""
+        return (PRIORITY_RANK[self.running[slot].priority],
+                self._admit_seq[slot])
+
+    def _protected_slots(self) -> set:
+        """The oldest admitted row of EVERY priority class. These are the
+        last rows eligible for preemption: strict priority admission means
+        a preempted best-effort row may requeue behind a sustained latency
+        stream forever, so the only way the per-class no-starvation
+        guarantee holds is if the oldest admitted row of each class keeps
+        its pages and finishes."""
+        oldest: Dict[str, int] = {}
+        for s, req in self.running.items():
+            c = req.priority
+            if c not in oldest or self._admit_seq[s] < self._admit_seq[oldest[c]]:
+                oldest[c] = s
+        return set(oldest.values())
+
     def _ensure_pages(self) -> None:
         """Every running row appends one KV row this step; map each row's
-        next page, preempting newest-admitted requests when the pool runs
-        dry (oldest requests keep their pages and make progress)."""
-        for slot in sorted(self.running, key=lambda s: self._admit_seq[s]):
+        next page, preempting worst-class newest-admitted requests when
+        the pool runs dry (better classes and older requests keep their
+        pages and make progress). The oldest admitted row of each class is
+        preempted only when no other victim is left — see
+        :meth:`_protected_slots`."""
+        for slot in sorted(self.running, key=self._victim_key):
             if slot not in self.running:
                 continue
             while not self.pool.ensure_append_page(slot):
-                victims = [s for s in self.running if s != slot]
+                protected = self._protected_slots()
+                victims = [s for s in self.running
+                           if s != slot and s not in protected]
                 if victims:
-                    self._preempt(max(victims, key=lambda s: self._admit_seq[s]))
+                    self._preempt(max(victims, key=self._victim_key))
                 elif self._prefills:
+                    # a pending prefill (no tokens emitted yet) is a cheaper
+                    # victim than any decode row
                     self._abort_prefill()
+                elif slot not in protected:
+                    # every OTHER row is its class's oldest: the needer
+                    # yields rather than evict a protected row. Protected
+                    # rows keep appending, so they finish and the yielder
+                    # is readmitted — no livelock.
+                    self._preempt(slot)
+                    break
+                elif len(self.running) > 1:
+                    # all rows protected (one per class) and the pool is
+                    # still dry: the worst class's row is the last resort
+                    worst = max(self.running, key=self._victim_key)
+                    self._preempt(worst)
+                    if worst == slot:
+                        break
+                elif self.pool.num_seized():
+                    # transient external exhaustion (fault injection seized
+                    # the free list): even the last row can't append, so it
+                    # waits out the fault as a queued recompute instead of
+                    # crashing the scheduler
+                    self._preempt(slot)
+                    break
                 else:
                     raise RuntimeError(
                         "paged KV pool cannot hold a single request; raise "
@@ -638,12 +920,122 @@ class ContinuousScheduler:
                 self.slot_keys, self.slot_steps)
 
     # ------------------------------------------------------------------
+    # client aborts, deadlines, graceful drain
+    # ------------------------------------------------------------------
+    def abort(self, rid: int, reason: str = "client") -> bool:
+        """Cancel request ``rid`` in WHATEVER lifecycle state it is in —
+        queued (fresh, preempted, or a pending fork child), mid-chunked-
+        prefill, mid-decode, or spread across COW-forked children — freeing
+        every slot and page it holds. Safe to call between ticks and from
+        ``on_token`` callbacks mid-tick (the postprocess loops re-check row
+        ownership). Aborting a forked request takes the whole sample group:
+        parent and every live child. Returns True if anything was
+        cancelled; False if ``rid`` holds nothing live (already finished,
+        shed, or unknown)."""
+        found: List[Request] = []
+        for r in [r for r in self.queue if r.rid == rid]:
+            self.queue.remove(r)
+            found.append(r)
+        live_pfs = [pf for pf in self._prefills if pf.req.rid == rid]
+        if live_pfs:
+            # rebuild rather than mutate: a mid-tick abort must not disturb
+            # the tick's own iteration over the captured prefill list
+            self._prefills = [pf for pf in self._prefills
+                              if pf.req.rid != rid]
+            for pf in live_pfs:
+                self.pool.free(pf.slot)
+                self.slot_temps[pf.slot] = 0.0
+                found.append(pf.req)
+        for slot, r in list(self.running.items()):
+            if r.rid == rid:
+                self.running.pop(slot)
+                self._admit_seq.pop(slot, None)
+                self.pool.free(slot)
+                self.slot_temps[slot] = 0.0
+                found.append(r)
+        if not found:
+            return False
+        root = next((r.parent for r in found if r.parent is not None),
+                    None) or found[0]
+        t_done = time.perf_counter()
+        for r in found:
+            r.state, r.slot, r.finish_reason = ABORTED, -1, reason
+            r.t_done = t_done
+        root.state, root.finish_reason = ABORTED, reason
+        root.t_done = t_done
+        self.aborted[rid] = root
+        self._m_client_aborts.inc()
+        self.obs.metrics.counter(
+            f"sched_aborts_{reason}_total",
+            f"requests aborted with reason={reason}").inc()
+        self.obs.slo.on_abort(root, self.ticks, reason)
+        self.obs.tracer.instant("abort", rid=rid, reason=reason,
+                                cancelled=len(found))
+        return True
+
+    def _expire_deadlines(self) -> None:
+        """Abort every live request whose ``deadline_ticks`` budget ran out
+        (it had that many full ticks since submission); pages freed through
+        the ordinary abort path, so a deadline storm leaves the pool
+        leak-report clean."""
+        t = self.ticks
+        expired = set()
+        for r in self.queue:
+            if (r.deadline_ticks is not None
+                    and t - r.submit_tick >= r.deadline_ticks):
+                expired.add(r.rid)
+        for pf in self._prefills:
+            r = pf.req
+            if (r.deadline_ticks is not None
+                    and t - r.submit_tick >= r.deadline_ticks):
+                expired.add(r.rid)
+        for r in self.running.values():
+            if (r.deadline_ticks is not None
+                    and t - r.submit_tick >= r.deadline_ticks):
+                expired.add(r.rid)
+        for rid in sorted(expired):
+            if self.abort(rid, reason="deadline"):
+                self.deadline_misses += 1
+                self._m_deadline.inc()
+
+    def shutdown(self, grace_ticks: int = 0) -> DrainReport:
+        """Graceful drain: stop admitting NEW submissions (submits shed
+        with reason ``"shutting_down"``), keep ticking up to
+        ``grace_ticks`` so in-flight and queued work can finish, then
+        abort whatever remains (reason ``"shutdown"``, partial output kept
+        on the request) and sweep the pool for leaks. Returns a
+        :class:`DrainReport`; call sites that must fail loudly check
+        ``report.clean`` and the shed list."""
+        self._draining = True
+        self._m_draining.set(1)
+        start = self.ticks
+        while self.busy() and self.ticks - start < grace_ticks:
+            self.step()
+        shed_rids = sorted({r.rid for r in self.queue}
+                           | {pf.req.rid for pf in self._prefills}
+                           | {r.rid for r in self.running.values()})
+        for rid in shed_rids:
+            self.abort(rid, reason="shutdown")
+        findings = self.drain_check()
+        if (self.cfg.check_leaks or self.obs.check_leaks) and findings:
+            raise RuntimeError(
+                "KV pool leaked at shutdown: " + "; ".join(findings))
+        report = DrainReport(
+            finished=len(self.finished), shed_rids=shed_rids,
+            grace_ticks_used=self.ticks - start, leak_findings=findings)
+        self.obs.tracer.instant(
+            "shutdown", grace=report.grace_ticks_used,
+            shed=len(shed_rids), finished=report.finished)
+        return report
+
+    # ------------------------------------------------------------------
     def step(self) -> None:
         """One scheduler tick. Paged: ONE jitted serve_step call over the
         packed ragged batch of decode tokens + every in-flight prefill's
         chunk. Slots: whole-prompt admission then a separate mixed decode
         call (the comparison layout)."""
         t0 = time.perf_counter()
+        self._expire_deadlines()
         with self.obs.tracer.span("tick", tick=self.ticks):
             if self.paged:
                 self._paged_tick()
@@ -666,28 +1058,43 @@ class ContinuousScheduler:
         next-shortest, and so on — short prompts reach their first token in
         as few ticks as possible instead of waiting out a long prompt.
 
-        Anti-starvation: the OLDEST prefill is first guaranteed a
-        ``budget / max_prefills`` slice before the shortest-first pass
-        spends the rest. Pure shortest-first would let a sustained stream
-        of short prompts zero out a long prompt's share every tick — the
-        long request would hold its claimed pages forever while its TTFT
-        grew without bound. The slice caps its prefill at
-        ``max_prefills * length / budget`` ticks while leaving short
-        prompts the bulk of the budget to keep overtaking.
-        Returns per-prefill token counts aligned with ``self._prefills``
-        (admission order; ties broken oldest-first)."""
-        shares = [0] * len(self._prefills)
+        Anti-starvation, per priority class: the OLDEST prefill of EACH
+        class present is first guaranteed a ``budget / max_prefills``
+        slice (better classes reserve theirs first when the budget is
+        tiny) before the greedy pass spends the rest class-major,
+        shortest-remaining-first within a class. Pure shortest-first
+        would let a sustained stream of short prompts zero out a long
+        prompt's share every tick — the long request would hold its
+        claimed pages forever while its TTFT grew without bound; making
+        the guarantee per class extends that to mixed-criticality load:
+        sustained latency-class traffic cannot zero out an admitted
+        best-effort prefill's slice. With a single class in flight this
+        reduces exactly to the PR 5 split. Returns per-prefill token
+        counts aligned with ``self._prefills`` (admission order; ties
+        broken oldest-first)."""
+        pfs = self._prefills
+        shares = [0] * len(pfs)
         budget = self._qw
-        if shares:
-            shares[0] = min(self._prefills[0].remaining,
-                            max(1, self._qw // self.cfg.max_prefills))
-            budget -= shares[0]
-        order = sorted(range(len(self._prefills)),
-                       key=lambda i: (self._prefills[i].remaining, i))
+        guaranteed: List[int] = []      # oldest prefill per class, best first
+        for cls in PRIORITIES:
+            idx = [i for i in range(len(pfs))
+                   if pfs[i].req.priority == cls]
+            if idx:
+                guaranteed.append(idx[0])
+        for i in guaranteed:
+            if budget <= 0:
+                break
+            shares[i] = min(pfs[i].remaining,
+                            max(1, self._qw // self.cfg.max_prefills),
+                            budget)
+            budget -= shares[i]
+        order = sorted(range(len(pfs)),
+                       key=lambda i: (PRIORITY_RANK[pfs[i].req.priority],
+                                      pfs[i].remaining, i))
         for i in order:
             if budget <= 0:
                 break
-            take = min(self._prefills[i].remaining - shares[i], budget)
+            take = min(pfs[i].remaining - shares[i], budget)
             shares[i] += take
             budget -= take
         return shares
@@ -754,12 +1161,19 @@ class ContinuousScheduler:
                 self.pool.advance([s for s, _ in active])
                 self.steps_decoded += 1
                 for slot, req in active:
+                    if self.running.get(slot) is not req:
+                        continue    # aborted mid-postprocess (on_token)
                     tok = int(toks[slot])
                     self.slot_tokens[slot, 0] = tok
-                    if self._emit(req, tok):
+                    done = self._emit(req, tok)
+                    if self.running.get(slot) is not req:
+                        continue    # on_token aborted this very request
+                    if done:
                         self._finish(req)
             still: List[_Prefill] = []
             for pf, n in zip(pfs, shares):
+                if pf.req.state == ABORTED:
+                    continue        # aborted mid-tick; pages already freed
                 if n == 0:
                     still.append(pf)
                     continue
@@ -779,7 +1193,10 @@ class ContinuousScheduler:
                     # singles drew (or argmax'd) inside serve_step itself
                     first = [int(toks[pf.slot])]
                 self._install(pf.req, pf.slot, pf.length, first)
-            self._prefills = still
+            # an on_token abort during an install above rebuilt
+            # self._prefills; don't resurrect an aborted entry from `still`
+            self._prefills = [pf for pf in still
+                              if pf.req.state != ABORTED]
         self.peak_running = max(self.peak_running, len(self.running))
         if tr.enabled and self.paged:
             tr.counter("pages", used=self.pool.blocks_in_use(),
@@ -807,9 +1224,14 @@ class ContinuousScheduler:
                 self.pool.advance([s for s, _ in active])
                 self.steps_decoded += 1
                 for slot, req in active:
+                    if self.running.get(slot) is not req:
+                        continue    # aborted mid-postprocess (on_token)
                     tok = int(toks[slot])
                     self.slot_tokens[slot, 0] = tok
-                    if self._emit(req, tok):
+                    done = self._emit(req, tok)
+                    if self.running.get(slot) is not req:
+                        continue    # on_token aborted this very request
+                    if done:
                         self._finish(req)
 
     def busy(self) -> bool:
