@@ -25,7 +25,11 @@ Four comparisons:
       ``max_prefills=1`` (serial chunking, the old scheduler) vs several
       prefills sharing the per-tick budget; records queued-request
       time-to-first-token percentiles in *scheduler ticks* (p50/p99,
-      load-invariant) alongside wall-clock ms and tok/s.
+      load-invariant) alongside wall-clock ms and tok/s;
+  (j) the cross-request prefix cache (``--prefix-cache`` reruns just
+      this) — a repeated-system-prompt workload served cold (cache off)
+      vs warm (per-task prefixes cached): queued TTFT tick percentiles,
+      prefill tokens saved, hit rate, bitwise-equal token streams.
 
 Besides tok/s — which swings ±20% with CPU machine load — every serving
 section records load-invariant structure: device dispatches per tick and
@@ -487,6 +491,116 @@ def run_sampling_and_forking(n_tasks=2, slots=6, n_requests=12, prompt=16,
         "forked_over_single": round(ratio, 3)}
 
 
+def run_prefix_cache(n_tasks=2, slots=4, n_requests=16, sys_prompt=64,
+                     tail=(4, 12), max_new=8, block_size=16, chunk=32,
+                     cache_pages=8, max_len=96, num_blocks=33):
+    """(j) cross-request shared-prefix page cache (``--prefix-cache``
+    reruns just this): every request of a task opens with the task's
+    64-token system prompt — 4 full pages at ``block_size=16`` — followed
+    by a short unique tail. The COLD pass serves the stream with the
+    cache off; the WARM pass pre-warms the cache with one short request
+    per task and serves the SAME stream, so every admission maps the
+    4-page prefix straight out of the cache and chunked prefill starts
+    at the first uncached token. The headline numbers are load-invariant:
+    queued-request TTFT tick percentiles warm vs cold, prefill tokens
+    skipped, hit rate, and one-dispatch-per-tick preserved — plus the
+    correctness bar asserted in-process: the two passes' token streams
+    are bitwise identical (the cache is a pure optimization)."""
+    cfg, model, params = bench_model(d_model=128, layers=4, vocab=512, heads=4,
+                                     kv=2)
+    tasks = [random_aot_fused(cfg, params, seed=t) for t in range(n_tasks)]
+    eng = ServeEngine(model, params, ServeConfig(max_len=max_len),
+                      fused_tasks=tasks)
+    rng = np.random.default_rng(11)
+    sys_p = {t: rng.integers(0, cfg.vocab_size, sys_prompt).astype(np.int32)
+             for t in range(n_tasks)}
+
+    def reqs():
+        rr = np.random.default_rng(12)
+        out = []
+        for i in range(n_requests):
+            t = int(rr.integers(0, n_tasks))
+            tl = rr.integers(0, cfg.vocab_size,
+                             int(rr.integers(tail[0], tail[1] + 1)))
+            out.append(Request(
+                rid=i, prompt=np.concatenate([sys_p[t], tl.astype(np.int32)]),
+                task_id=t, max_new_tokens=max_new))
+        return out
+
+    def serve(cached):
+        obs = ServeObservability(metrics=True, check_leaks=True)
+        sched = ContinuousScheduler(eng, SchedulerConfig(
+            num_slots=slots, kv_layout="paged", block_size=block_size,
+            num_blocks=num_blocks, prefill_chunk=chunk,
+            prefix_cache_pages=cache_pages if cached else 0), obs=obs)
+        if cached:      # pre-warm: one short request per task retains the
+            for t in range(n_tasks):         # system prompt's full pages
+                sched.submit(Request(
+                    rid=1000 + t,
+                    prompt=np.concatenate([sys_p[t],
+                                           np.asarray([7], np.int32)]),
+                    task_id=t, max_new_tokens=2))
+            sched.run()
+        cache = sched.pool.prefix_cache
+        pre_hits = cache.hits if cached else 0
+        pre_tokens = cache.hit_tokens if cached else 0
+        d0, ticks0 = eng.dispatches, sched.ticks
+        t0 = time.perf_counter()
+        for r in reqs():
+            sched.submit(r)
+        fin = sched.run()
+        dt = time.perf_counter() - t0
+        dispatches = eng.dispatches - d0
+        slo = sched.obs.slo.summary()
+        if cached:      # measured-stream TTFT = the hit (warm) requests
+            ttft = slo["prefix_cache"]["warm_ttft_ticks"]
+            assert slo["prefix_cache"]["warm_requests"] == n_requests
+        else:
+            ttft = slo["ttft_ticks"]
+        return {
+            "ttft_p50_ticks": ttft["p50"],
+            "ttft_p99_ticks": ttft["p99"],
+            "tok_per_s": round(sched.tokens_emitted / dt, 1),
+            "dispatches_per_tick": round(
+                dispatches / max(sched.ticks - ticks0, 1), 3),
+            "hit_rate": round((cache.hits - pre_hits) / n_requests, 3)
+            if cached else 0.0,
+            "prefill_tokens_saved": (cache.hit_tokens - pre_tokens)
+            if cached else 0,
+            "cached_pages": len(cache) if cached else 0,
+            "outs": {rid: list(r.out) for rid, r in fin.items()
+                     if rid < 1000},
+        }
+
+    serve(False), serve(True)               # warm both passes' compilations
+    cold, warm = serve(False), serve(True)
+    assert warm["outs"] == cold["outs"], \
+        "cache-hit decode diverged from cold decode (must be bitwise equal)"
+    speedup = cold["ttft_p50_ticks"] / max(warm["ttft_p50_ticks"], 1e-9)
+    emit("multitask/prefix_cache", 0.0,
+         f"ttft_p50_ticks {cold['ttft_p50_ticks']:.0f}->"
+         f"{warm['ttft_p50_ticks']:.0f} ({speedup:.1f}x) "
+         f"hit_rate={warm['hit_rate']:.2f} "
+         f"tokens_saved={warm['prefill_tokens_saved']}")
+    for d in (cold, warm):
+        d.pop("outs")
+    RESULTS["prefix_cache"] = {
+        "workload": {"requests": n_requests, "tasks": n_tasks,
+                     "system_prompt": sys_prompt, "tail": list(tail),
+                     "max_new": max_new, "slots": slots,
+                     "block_size": block_size, "prefill_chunk": chunk,
+                     "cache_pages": cache_pages, "num_blocks": num_blocks},
+        "cold": cold,
+        "warm": warm,
+        "ttft_p50_ticks_speedup": round(speedup, 3),
+        "bitwise_equal": 1,
+        "note": "warm pre-caches each task's 64-token system prompt (4 "
+                "full pages) then serves the identical stream; TTFT tick "
+                "percentiles are load-invariant, tok/s is CPU context; "
+                "bitwise_equal=1 records the in-process assertion that "
+                "warm and cold token streams matched exactly"}
+
+
 def run_overload(n_tasks=2, slots=4, max_len=64, block_size=8, num_blocks=13,
                  n_requests=40, burst=8, gap=6, max_queue=14,
                  deadline_ticks=24, ttft_slo=10.0, seed=7):
@@ -654,6 +768,7 @@ def run(n_tasks=4, batch=8, prompt=32, steps=16):
     run_multi_prefill()
     run_sampling_and_forking()
     run_overload()
+    run_prefix_cache()
     write_bench_json()
     # asserted AFTER the write so a regression still records the evidence
     ratio = RESULTS["fork_cow"]["forked_over_single"]
@@ -666,6 +781,11 @@ def run(n_tasks=4, batch=8, prompt=32, steps=16):
         "multi-prefill packing did not improve queued-request p50 TTFT "
         f"({mp['multi_prefill']['ttft_p50_ticks']} vs "
         f"{mp['single_prefill']['ttft_p50_ticks']} ticks)")
+    pc = RESULTS["prefix_cache"]
+    assert (pc["warm"]["ttft_p50_ticks"] < pc["cold"]["ttft_p50_ticks"]), (
+        "warm cache-hit p50 TTFT is not below cold "
+        f"({pc['warm']['ttft_p50_ticks']} vs "
+        f"{pc['cold']['ttft_p50_ticks']} ticks)")
 
 
 def _rerun_section(fn):
@@ -690,6 +810,10 @@ def main():
                     help="rerun only the overload (priority classes / "
                          "shedding / deadlines) measurement and merge it "
                          "into the existing BENCH_serve.json")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="rerun only the warm-vs-cold prefix-cache "
+                         "measurement and merge it into the existing "
+                         "BENCH_serve.json")
     args = ap.parse_args()
     if args.mixed_step:
         _rerun_section(run_mixed_step)
@@ -697,6 +821,8 @@ def main():
         _rerun_section(run_multi_prefill)
     elif args.overload:
         _rerun_section(run_overload)
+    elif args.prefix_cache:
+        _rerun_section(run_prefix_cache)
     else:
         run()
 

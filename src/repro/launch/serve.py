@@ -243,6 +243,20 @@ def main():
                     help="prompts allowed to chunk concurrently, splitting "
                          "the per-tick budget shortest-remaining-first "
                          "(1 = serial prefill admission)")
+    pc = ap.add_argument_group("prefix caching (cross-request page reuse)")
+    pc.add_argument("--prefix-cache-pages", type=int, default=0,
+                    help="cross-request shared-prefix page cache capacity: "
+                         "finished requests' full prompt pages are retained "
+                         "(LRU) and matched into later same-task "
+                         "admissions, so their prefill starts at the first "
+                         "uncached token (needs --layout paged and "
+                         "--prefill-chunk > 0; 0 = off)")
+    pc.add_argument("--system-prompt", type=int, default=0,
+                    help="repeated-system-prompt workload: prepend a fixed "
+                         "per-task system prefix of this many tokens to "
+                         "every request's prompt — the many-users-per-task "
+                         "traffic shape the prefix cache exists for "
+                         "(0 = fully random prompts)")
     samp = ap.add_argument_group("sampling (default: greedy)")
     samp.add_argument("--temperature", type=float, default=0.0,
                       help="0 = greedy argmax; > 0 samples from the scaled "
@@ -293,10 +307,17 @@ def main():
     if not args.demo and not args.load:
         ap.error("pass --demo (fabricated tables) or --load DIR "
                  "(fused tables from examples/fuse_and_export.py)")
-    if args.prompt + args.steps - 1 > args.max_len:
-        ap.error(f"--prompt {args.prompt} + --steps {args.steps} cannot fit "
+    if args.system_prompt + args.prompt + args.steps - 1 > args.max_len:
+        ap.error(f"--system-prompt {args.system_prompt} + --prompt "
+                 f"{args.prompt} + --steps {args.steps} cannot fit "
                  f"--max-len {args.max_len}; raise --max-len or shrink the "
                  "requests")
+    if args.prefix_cache_pages > 0 and (args.layout != "paged"
+                                        or args.prefill_chunk <= 0):
+        ap.error(f"--prefix-cache-pages {args.prefix_cache_pages} needs "
+                 "--layout paged with --prefill-chunk > 0 (cached pages "
+                 "are mapped through block tables and prefill resumes at "
+                 "the first uncached token)")
     if args.samples > 1 and args.layout != "paged":
         ap.error(f"--samples {args.samples} needs --layout paged "
                  "(parallel samples share prefill KV via COW page forking)")
@@ -375,6 +396,15 @@ def main():
             ticks.append(int(t))
     classes = list(mix)
     weights = [mix[c] for c in classes]
+    # repeated-system-prompt workload: every request for task t opens with
+    # the SAME seeded prefix — across requests those prefixes are identical
+    # KV, which is exactly what --prefix-cache-pages deduplicates
+    sys_prompts = {}
+    if args.system_prompt > 0:
+        sys_prompts = {t: rng.integers(0, cfg.vocab_size, args.system_prompt)
+                       .astype(np.int32) for t in range(n_tasks)}
+        print(f"repeated-system-prompt workload: {args.system_prompt} shared "
+              f"tokens per task + 4..{args.prompt} unique tokens per request")
     arrivals = []
     for i in range(args.requests):
         plen = int(rng.integers(4, args.prompt + 1))
@@ -382,9 +412,13 @@ def main():
         if prio not in PRIORITIES:
             ap.error(f"arrival trace priority {prio!r} is not one of "
                      f"{', '.join(PRIORITIES)}")
+        task = int(rng.integers(0, n_tasks))
+        prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        if sys_prompts:
+            prompt = np.concatenate([sys_prompts[task], prompt])
         req = Request(
-            rid=i, prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
-            task_id=int(rng.integers(0, n_tasks)),
+            rid=i, prompt=prompt,
+            task_id=task,
             max_new_tokens=int(rng.integers(2, args.steps + 1)),
             priority=prio,
             deadline_ticks=(args.deadline_ticks
@@ -411,6 +445,7 @@ def main():
         num_slots=args.slots, kv_layout=args.layout,
         block_size=args.block_size, num_blocks=args.num_blocks,
         prefill_chunk=args.prefill_chunk, max_prefills=args.max_prefills,
+        prefix_cache_pages=args.prefix_cache_pages,
         max_queue=args.max_queue),
         obs=obs)
     if obs is not None:
@@ -452,6 +487,16 @@ def main():
               f"peak concurrent prefills {sched.peak_prefills}, "
               f"{sched.preemptions} preemptions, "
               f"{pool.forks} forks, {pool.cow_copies} COW page copies")
+        cache = pool.prefix_cache
+        if cache is not None:
+            total = cache.hits + cache.misses
+            rate = cache.hits / max(total, 1)
+            print(f"prefix cache ({cache.capacity} pages): {cache.hits}/"
+                  f"{total} admissions hit ({rate:.0%}), "
+                  f"{cache.hit_tokens} prefill tokens skipped, "
+                  f"{cache.retained_pages} pages retained, "
+                  f"{cache.evicted_pages} evicted, {len(cache)} resident "
+                  "at exit")
     if retries or shed_rids or sched.shed or sched.aborted:
         print(f"overload: {retries} shed retries (backoff base "
               f"{args.backoff}), {len(shed_rids)} requests gave up after "
@@ -469,7 +514,9 @@ def main():
     if drain_report is not None:
         print(f"shutdown(grace={args.grace_ticks}): finished "
               f"{drain_report.finished}, used {drain_report.grace_ticks_used}"
-              f" grace ticks, shed {len(drain_report.shed_rids)} in-flight "
+              f" grace ticks, released {drain_report.cache_pages_released} "
+              f"cached prefix pages, shed {len(drain_report.shed_rids)} "
+              f"in-flight "
               f"{drain_report.shed_rids if drain_report.shed_rids else ''}"
               .rstrip())
     if obs is not None and obs.metrics.enabled:
@@ -511,6 +558,14 @@ def main():
         if summary.get("sheds"):
             print(f"  sheds: {summary['sheds']} "
                   f"(by class: {summary.get('sheds_by_class', {})})")
+        pcs = summary.get("prefix_cache")
+        if pcs:
+            print("prefix-cache TTFT (real-tick series): "
+                  f"warm p50={pcs['warm_ttft_ticks']['p50']:g} "
+                  f"({pcs['warm_requests']} requests) vs "
+                  f"cold p50={pcs['cold_ttft_ticks']['p50']:g} "
+                  f"({pcs['cold_requests']} requests); "
+                  f"{pcs['cached_tokens']} prompt tokens served from cache")
         if args.metrics_out:
             obs.metrics.write_jsonl(args.metrics_out,
                                     extra={"slo": summary,

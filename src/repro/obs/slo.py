@@ -49,6 +49,9 @@ class Lifecycle:
     tokens: int = 0
     preemptions: int = 0
     admissions: int = 0                      # > 1 after preempt-recompute
+    cached_prefix_tokens: int = 0            # prefill tokens skipped via
+                                             # prefix-cache hits (all
+                                             # admissions summed)
     submit_tick: int = 0
     submit_wall: float = 0.0
     admit_tick: Optional[int] = None         # first admission only
@@ -113,6 +116,7 @@ class SLOTracker:
         self.abort_reasons: Dict[str, int] = {}
         self.shed_reasons: Dict[str, int] = {}
         self.shed_by_class: Dict[str, int] = {}
+        self._prefix_lookups = False     # any prefix-cache hit reported
 
     def _rec(self, req, tick: int) -> Lifecycle:
         key = (req.rid, req.sample_idx)
@@ -164,6 +168,16 @@ class SLOTracker:
         if not self.enabled:
             return
         self._rec(req, tick).preemptions += 1
+
+    def on_prefix_hit(self, req, tick: int, cached_tokens: int) -> None:
+        """Admission mapped ``cached_tokens`` prefill tokens from the
+        shared-prefix page cache instead of recomputing them. Splits the
+        TTFT series into warm (any hit) vs cold in :meth:`summary` —
+        the cache's whole point is the TTFT gap between the two."""
+        if not self.enabled:
+            return
+        self._prefix_lookups = True
+        self._rec(req, tick).cached_prefix_tokens += cached_tokens
 
     def on_finish(self, req, tick: int) -> None:
         if not self.enabled:
@@ -259,6 +273,21 @@ class SLOTracker:
             out[name] = _pctls(vals)
         if targets:
             out["slo_attainment"] = self._attainment(series, targets)
+        if self._prefix_lookups:
+            # warm = admitted through >= 1 prefix-cache hit, cold = never;
+            # the TTFT gap between the two series IS the cache's value,
+            # reported in the same load-invariant tick units as above
+            warm = [r for r in fin if r.cached_prefix_tokens > 0]
+            cold = [r for r in fin if r.cached_prefix_tokens == 0]
+            out["prefix_cache"] = {
+                "warm_requests": len(warm),
+                "cold_requests": len(cold),
+                "cached_tokens": sum(r.cached_prefix_tokens for r in warm),
+                "warm_ttft_ticks": _pctls([r.ttft_ticks() for r in warm]),
+                "cold_ttft_ticks": _pctls([r.ttft_ticks() for r in cold]),
+                "warm_ttft_ms": _pctls([r.ttft_ms() for r in warm]),
+                "cold_ttft_ms": _pctls([r.ttft_ms() for r in cold]),
+            }
         # union over finished, shed, and aborted: a class that finished
         # nothing (fully shed under overload) must still show up — its
         # absence from the report is exactly the signal being measured

@@ -223,6 +223,14 @@ class SchedulerConfig:
                                         # (paged only; 0 = whole-prompt)
     max_prefills: int = 4               # cap on concurrently chunking
                                         # prefills sharing that budget
+    prefix_cache_pages: int = 0         # cross-request shared-prefix page
+                                        # cache capacity: finished requests'
+                                        # full prompt pages are retained
+                                        # (LRU) and matched into new
+                                        # admissions of the SAME task, so
+                                        # chunked prefill starts at the
+                                        # first uncached token (paged +
+                                        # prefill_chunk only; 0 = off)
     max_queue: int = 0                  # bounded admission queue: submits
                                         # beyond this many waiters are SHED
                                         # (ShedError) unless they outrank
@@ -260,6 +268,8 @@ class DrainReport:
     shed_rids: List[int]                # rids aborted when grace expired
     grace_ticks_used: int               # ticks spent draining
     leak_findings: List[str]            # pool invariant sweep (empty = clean)
+    cache_pages_released: int = 0       # prefix-cache pages flushed back to
+                                        # the free list at shutdown
 
     @property
     def clean(self) -> bool:
@@ -311,6 +321,12 @@ class ContinuousScheduler:
                 num_blocks=cfg.num_blocks or None)
         else:
             self.pool = SlotKVPool(engine.model, cfg.num_slots, self.max_len)
+        if cfg.prefix_cache_pages > 0:
+            assert cfg.kv_layout == "paged" and cfg.prefill_chunk > 0, (
+                "the prefix cache maps cached pages into block tables and "
+                "starts prefill at the first uncached token — that needs "
+                "kv_layout='paged' with chunked prefill (prefill_chunk > 0)")
+            self.pool.enable_prefix_cache(cfg.prefix_cache_pages)
         self.queue = _ClassQueues()
         self.running: Dict[int, Request] = {}        # slot -> request
         self.finished: Dict[int, Request] = {}       # rid -> request
@@ -540,8 +556,20 @@ class ContinuousScheduler:
             sp is not None and tok in sp.stop)
         return done
 
+    def _retain_prefix(self, req: Request) -> None:
+        """Retain a finishing request's full prompt pages in the prefix
+        cache (before the slot frees them). Generated tokens are never
+        cached — only the prompt is input, and only full pages carry a
+        complete block's KV. Forked sample children retain too: their
+        leading pages are the shared prompt pages, and an already-cached
+        chain just gets an LRU touch."""
+        cache = getattr(self.pool, "prefix_cache", None)
+        if cache is not None and req.slot >= 0:
+            cache.retain(req.task_id, req.prompt, req.slot)
+
     def _finish(self, req: Request) -> None:
         self.running.pop(req.slot, None)
+        self._retain_prefix(req)
         self.pool.free(req.slot)
         self.slot_temps[req.slot] = 0.0     # freed rows ride along as greedy
         req.state = FINISHED
@@ -593,6 +621,16 @@ class ContinuousScheduler:
             return self.pool.free_blocks() >= need
         return True
 
+    def _match_prefix(self, req: Request) -> List[bytes]:
+        """Cache keys for the request's longest cached full-page prefix
+        ([] without a cache or on a miss). Recomputes after preemption
+        match too: their prefill stream begins with the prompt, and the
+        chain walk simply stops where the cache's knowledge ends."""
+        cache = getattr(self.pool, "prefix_cache", None)
+        if cache is None:
+            return []
+        return cache.match(req.task_id, self._prefill_tokens(req))
+
     def _can_admit_chunked(self, req: Request) -> bool:
         """Chunked admission claims the prompt's pages for several ticks
         before the request emits anything, so it must leave headroom: one
@@ -600,11 +638,19 @@ class ContinuousScheduler:
         guard, an aborted prefill requeued at the head is re-admitted on
         the very next tick, re-burns its pages, and is aborted again as
         soon as a decode append runs dry — thrash that can starve decode
-        progress entirely."""
+        progress entirely.
+
+        A prefix-cache hit shrinks the claim to the UNCACHED pages; the
+        matched entries are passed to ``can_claim`` as excluded so their
+        pages are never double-counted as evictable headroom (pinning
+        them is what admission is about to do)."""
         if not self.pool.has_free():
             return False
-        need = self.pool.pages_needed(len(self._prefill_tokens(req)))
-        return self.pool.can_claim(need, reserve=len(self.running))
+        keys = self._match_prefix(req)
+        need = self.pool.pages_needed(
+            len(self._prefill_tokens(req))) - len(keys)
+        return self.pool.can_claim(need, reserve=len(self.running),
+                                   exclude_keys=keys)
 
     def _first_sample_spec(self, req: Request):
         """Sampling spec for the first-token draw from the prefill logits.
@@ -724,16 +770,36 @@ class ContinuousScheduler:
         """Claim a slot + prompt pages; the chunks themselves ride the
         unified serve step as ragged spans of each tick's packed list — no
         device call here, no temp cache, no bucket padding (the static
-        budget width is the only prefill compilation)."""
+        budget width is the only prefill compilation).
+
+        On a prefix-cache hit the slot's leading pages alias the cached
+        prefix (refcount bump, entries pinned until the slot frees) and
+        the prefill starts ``done`` tokens in — the ragged kernel reads
+        the cached KV through the block table at the same absolute
+        positions a cold prefill would have written, so the tokens that
+        come out are bitwise identical (test-enforced)."""
         toks = self._prefill_tokens(req)
-        slot = self._alloc_slot(req, len(toks))
+        cache = getattr(self.pool, "prefix_cache", None)
+        keys = self._match_prefix(req)
+        if keys:
+            slot = self.pool.alloc_cached(
+                req.task_id, keys, self.pool.pages_needed(len(toks)))
+        else:
+            slot = self._alloc_slot(req, len(toks))
         assert slot is not None
+        cached = len(keys) * self.cfg.block_size
+        if cache is not None:
+            cache.record_lookup(cached)
+            if cached:
+                self.obs.slo.on_prefix_hit(req, self.ticks, cached)
+                self.obs.tracer.instant("prefix_hit", rid=req.rid,
+                                        tokens=cached)
         self._m_admitted.inc()
         self.obs.slo.on_admit(req, self.ticks)
         self.slot_temps[slot] = 0.0     # draws armed on the final chunk only
         self._prefills.append(_Prefill(req=req, slot=slot,
                                        toks=np.asarray(toks, np.int32),
-                                       length=len(toks)))
+                                       length=len(toks), done=cached))
         self.peak_prefills = max(self.peak_prefills, len(self._prefills))
 
     def _arm_first_draw(self, req: Request, slot: int) -> None:
@@ -1016,13 +1082,19 @@ class ContinuousScheduler:
                            | {r.rid for r in self.running.values()})
         for rid in shed_rids:
             self.abort(rid, reason="shutdown")
+        # a shut-down server returns every page: flush the prefix cache
+        # (all requests are gone, so nothing is pinned and the flush
+        # releases every retained page) before the invariant sweep
+        cache_released = (self.pool.flush_prefix_cache()
+                          if self.paged else 0)
         findings = self.drain_check()
         if (self.cfg.check_leaks or self.obs.check_leaks) and findings:
             raise RuntimeError(
                 "KV pool leaked at shutdown: " + "; ".join(findings))
         report = DrainReport(
             finished=len(self.finished), shed_rids=shed_rids,
-            grace_ticks_used=self.ticks - start, leak_findings=findings)
+            grace_ticks_used=self.ticks - start, leak_findings=findings,
+            cache_pages_released=cache_released)
         self.obs.tracer.instant(
             "shutdown", grace=report.grace_ticks_used,
             shed=len(shed_rids), finished=report.finished)
