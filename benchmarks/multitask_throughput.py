@@ -29,7 +29,10 @@ Four comparisons:
   (j) the cross-request prefix cache (``--prefix-cache`` reruns just
       this) — a repeated-system-prompt workload served cold (cache off)
       vs warm (per-task prefixes cached): queued TTFT tick percentiles,
-      prefill tokens saved, hit rate, bitwise-equal token streams.
+      prefill tokens saved, hit rate, bitwise-equal token streams;
+  (k) crash recovery (``--recovery`` reruns just this) — a journaled
+      stream killed mid-flight and restored: bitwise-equal recovered
+      streams, journal bytes/events per request, recovery ticks.
 
 Besides tok/s — which swings ±20% with CPU machine load — every serving
 section records load-invariant structure: device dispatches per tick and
@@ -719,6 +722,121 @@ def run_overload(n_tasks=2, slots=4, max_len=64, block_size=8, num_blocks=13,
                 "claims (deterministic workload, seeded)"}
 
 
+def run_recovery(n_tasks=2, slots=4, max_len=64, block_size=8, num_blocks=20,
+                 n_requests=24, kill_tick=20, seed=11):
+    """(k) crash recovery (``--recovery`` reruns just this): a journaled
+    stream killed mid-flight at a fixed tick, restored from the journal,
+    and drained to completion. The structural claims: every recovered
+    stream is bitwise identical to an uninterrupted run (preempt-and-
+    recompute replay is exact), the journal overhead is a bounded number
+    of bytes/events per request, and recovery cost is the deterministic
+    number of ticks the restored scheduler needs to drain the survivors.
+    Gated by check_bench via the ``recovery.*`` baseline rules."""
+    import tempfile
+
+    from repro.serve.recovery import RequestJournal, replay_journal
+
+    cfg, model, params = bench_model(d_model=128, layers=4, vocab=512, heads=4,
+                                     kv=2)
+    tasks = [random_aot_fused(cfg, params, seed=t) for t in range(n_tasks)]
+    eng = ServeEngine(model, params, ServeConfig(max_len=max_len),
+                      fused_tasks=tasks)
+
+    def arrivals():
+        rr = np.random.default_rng(seed)
+        out = []
+        for i in range(n_requests):
+            plen = int(rr.integers(8, 17))
+            sp = (SamplingParams(temperature=0.8, top_k=20, seed=100 + i,
+                                 n=2 if i % 8 == 0 else 1)
+                  if i % 4 == 0 else None)
+            out.append((i // 3, Request(
+                rid=i,
+                prompt=rr.integers(0, cfg.vocab_size, plen).astype(np.int32),
+                task_id=int(rr.integers(0, n_tasks)),
+                max_new_tokens=int(rr.integers(4, 11)), sampling=sp)))
+        return out
+
+    def make_sched(journal=None):
+        return ContinuousScheduler(eng, SchedulerConfig(
+            num_slots=slots, kv_layout="paged", block_size=block_size,
+            num_blocks=num_blocks, prefill_chunk=block_size),
+            journal=journal)
+
+    baseline = make_sched().run_stream(arrivals())
+
+    fd, path = tempfile.mkstemp(suffix=".jsonl")
+    os.close(fd)
+    os.remove(path)                    # journal opens its own append handle
+    try:
+        sched = make_sched(RequestJournal(path))
+        stream = arrivals()
+        i = 0
+        while i < len(stream) or sched.busy():
+            if (not sched.busy() and i < len(stream)
+                    and stream[i][0] > sched.clock):
+                sched.clock = stream[i][0]
+            while i < len(stream) and stream[i][0] <= sched.clock:
+                sched.submit(stream[i][1])
+                i += 1
+            sched.step()
+            if sched.ticks >= kill_tick and sched.busy():
+                break                  # simulated SIGKILL: no shutdown
+        journal_events = sched.journal.events_written
+        journal_bytes = sched.journal.bytes_written
+        sched.journal.close()
+
+        t0 = time.perf_counter()
+        snap = replay_journal(path)
+        sched2 = make_sched(RequestJournal(path))
+        counts = sched2.restore(snap)
+        restore_ms = (time.perf_counter() - t0) * 1e3
+        recompute_tokens = sum(
+            len(r["prompt"]) + sum(len(v) for v in r["out"].values())
+            for r in snap["requests"] if r["status"] == "live")
+        for j in range(i, len(stream)):
+            sched2.submit(stream[j][1])
+        fin = sched2.run()
+        recovery_ticks = sched2.ticks
+        assert sched2.drain_check() == []
+    finally:
+        if os.path.exists(path):
+            os.remove(path)
+
+    def _same(a, b):
+        if not np.array_equal(np.asarray(a.out), np.asarray(b.out)):
+            return False
+        if (b.samples is None) != (a.samples is None):
+            return False
+        return b.samples is None or all(
+            np.array_equal(np.asarray(x), np.asarray(y))
+            for x, y in zip(a.samples, b.samples))
+
+    bitwise = (set(fin) == set(baseline)
+               and all(_same(fin[r], baseline[r]) for r in baseline))
+    emit("multitask/recovery", 0.0,
+         f"bitwise={int(bitwise)} live_restored={counts['live']} "
+         f"recovery_ticks={recovery_ticks} "
+         f"journal_bytes_per_req={journal_bytes / n_requests:.0f}")
+    RESULTS["recovery"] = {
+        "workload": {"requests": n_requests, "slots": slots,
+                     "block_size": block_size, "num_blocks": num_blocks,
+                     "kill_tick": kill_tick},
+        "bitwise_equal": float(bitwise),
+        "live_restored": counts["live"],
+        "finished_restored": counts["finished"],
+        "recompute_tokens": recompute_tokens,
+        "recovery_ticks": recovery_ticks,
+        "journal_events": journal_events,
+        "journal_bytes": journal_bytes,
+        "journal_bytes_per_request": round(journal_bytes / n_requests, 1),
+        "restore_ms": round(restore_ms, 2),
+        "note": "restore_ms is CPU context; bitwise_equal, restored "
+                "counts, recovery ticks, and journal overhead are the "
+                "structural claims (deterministic workload, fixed kill "
+                "tick)"}
+
+
 def write_bench_json():
     with open(BENCH_JSON, "w") as f:
         json.dump(RESULTS, f, indent=2, sort_keys=True)
@@ -769,6 +887,7 @@ def run(n_tasks=4, batch=8, prompt=32, steps=16):
     run_sampling_and_forking()
     run_overload()
     run_prefix_cache()
+    run_recovery()
     write_bench_json()
     # asserted AFTER the write so a regression still records the evidence
     ratio = RESULTS["fork_cow"]["forked_over_single"]
@@ -814,6 +933,10 @@ def main():
                     help="rerun only the warm-vs-cold prefix-cache "
                          "measurement and merge it into the existing "
                          "BENCH_serve.json")
+    ap.add_argument("--recovery", action="store_true",
+                    help="rerun only the kill-and-restore crash-recovery "
+                         "measurement and merge it into the existing "
+                         "BENCH_serve.json")
     args = ap.parse_args()
     if args.mixed_step:
         _rerun_section(run_mixed_step)
@@ -823,6 +946,8 @@ def main():
         _rerun_section(run_overload)
     elif args.prefix_cache:
         _rerun_section(run_prefix_cache)
+    elif args.recovery:
+        _rerun_section(run_recovery)
     else:
         run()
 

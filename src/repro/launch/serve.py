@@ -35,6 +35,7 @@ from repro.core import aot as aot_mod
 from repro.models.model import Model, ModelOptions
 from repro.obs import ServeObservability
 from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.recovery import RequestJournal, replay_journal
 from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import (PRIORITIES, ContinuousScheduler, Request,
                                    SchedulerConfig, ShedError, STANDARD)
@@ -121,7 +122,9 @@ def load_arrival_trace(path: str, n: int):
 
 
 def run_with_retries(sched, arrivals, grace_ticks: int,
-                     max_retries: int, backoff: int):
+                     max_retries: int, backoff: int,
+                     crash_at_tick: int = 0, make_sched=None,
+                     on_token=None):
     """Client loop: submit on each request's arrival tick; a shed request
     is re-enqueued with exponential backoff (``backoff ** attempt`` ticks)
     up to ``max_retries`` resubmissions. Two shed paths reach the client:
@@ -130,14 +133,23 @@ def run_with_retries(sched, arrivals, grace_ticks: int,
     nothing at the victim's own submit, so the loop scans
     ``sched.shed`` after every tick for victims to resubmit. When the
     stream ends, ``grace_ticks >= 0`` hands off to ``Scheduler.shutdown``
-    (graceful drain with a deadline); ``-1`` drains fully. Returns
-    ``(gave_up_rids, retries, drain_report_or_None)``."""
+    (graceful drain with a deadline); ``-1`` drains fully.
+
+    ``crash_at_tick > 0`` (with ``make_sched``, a zero-arg factory for a
+    fresh scheduler journaling to the SAME path) simulates process death
+    once, at that global tick: the live scheduler is abandoned where it
+    stands, its journal is replayed, and the factory's replacement is
+    restored and keeps serving. Returns
+    ``(gave_up_rids, retries, drain_report_or_None, sched)`` — ``sched``
+    is the scheduler that finished the run (the replacement, after a
+    crash)."""
     heap = [(t, i, req) for i, (t, req) in enumerate(arrivals)]
     heapq.heapify(heap)
     seq = len(heap)
     attempts = {}                        # rid -> submissions so far
     pending = {req.rid for _, _, req in heap}   # queued for (re)submit
     gave_up, retries = [], 0
+    gt = 0                               # global tick, survives the crash
 
     def requeue(req):
         nonlocal seq, retries
@@ -163,15 +175,27 @@ def run_with_retries(sched, arrivals, grace_ticks: int,
             except ShedError:
                 requeue(req)
         sched.step()
+        gt += 1
+        if crash_at_tick and gt == crash_at_tick and make_sched is not None:
+            path = sched.journal.path
+            sched.journal.close()
+            snap = replay_journal(path)
+            live = sum(1 for r in snap["requests"]
+                       if r.get("status") == "live")
+            sched = make_sched()
+            sched.restore(snap, on_token=on_token)
+            print(f"simulated crash at tick {gt}: replayed journal "
+                  f"{path} ({len(snap['requests'])} requests, {live} live "
+                  "re-admitted through chunked prefill replay)")
         for rid in [r for r in sched.shed if r not in pending]:
             requeue(sched.shed[rid])     # displaced victim: client resubmits
     if grace_ticks >= 0:
         report = sched.shutdown(grace_ticks)
-        return gave_up, retries, report
+        return gave_up, retries, report, sched
     while sched.busy():
         sched.step()
     sched._maybe_check_leaks()
-    return gave_up, retries, None
+    return gave_up, retries, None, sched
 
 
 def main():
@@ -225,6 +249,22 @@ def main():
                           "Scheduler.shutdown once the stream ends: "
                           "in-flight work gets this many ticks, the rest "
                           "is shed and reported (-1 = drain fully)")
+    rec = ap.add_argument_group("crash recovery (repro.serve.recovery)")
+    rec.add_argument("--journal", metavar="FILE",
+                     help="append every request lifecycle transition "
+                          "(submit/admit/emit/finish/shed/abort/"
+                          "quarantine) to this JSONL file — enough to "
+                          "replay the run after a crash")
+    rec.add_argument("--restore-from", metavar="FILE",
+                     help="before serving, replay this journal and "
+                          "re-admit its surviving requests through "
+                          "chunked prefill replay (recovered streams are "
+                          "bitwise-identical to an uninterrupted run)")
+    rec.add_argument("--crash-at-tick", type=int, default=0,
+                     help="demo: simulate process death at this global "
+                          "tick — abandon the scheduler mid-stream, "
+                          "replay --journal, restore a fresh scheduler, "
+                          "keep serving (0 = off; requires --journal)")
     ap.add_argument("--slots", type=int, default=4,
                     help="KV-pool slots (continuous batch width)")
     ap.add_argument("--layout", choices=("paged", "slots"), default="paged",
@@ -321,6 +361,9 @@ def main():
     if args.samples > 1 and args.layout != "paged":
         ap.error(f"--samples {args.samples} needs --layout paged "
                  "(parallel samples share prefill KV via COW page forking)")
+    if args.crash_at_tick > 0 and not args.journal:
+        ap.error("--crash-at-tick needs --journal (recovery replays the "
+                 "journal; without one there is nothing to restore from)")
 
     cfg = configs.get(args.arch)
     if args.reduced:
@@ -441,19 +484,34 @@ def main():
             metrics=bool(args.metrics or args.metrics_out),
             trace=bool(args.trace_out), jax_profile_dir=args.jax_profile,
             check_leaks=args.check_leaks)
-    sched = ContinuousScheduler(eng, SchedulerConfig(
+    sched_cfg = SchedulerConfig(
         num_slots=args.slots, kv_layout=args.layout,
         block_size=args.block_size, num_blocks=args.num_blocks,
         prefill_chunk=args.prefill_chunk, max_prefills=args.max_prefills,
         prefix_cache_pages=args.prefix_cache_pages,
-        max_queue=args.max_queue),
-        obs=obs)
+        max_queue=args.max_queue)
+
+    def make_sched():
+        journal = RequestJournal(args.journal) if args.journal else None
+        return ContinuousScheduler(eng, sched_cfg, obs=obs, journal=journal)
+
+    sched = make_sched()
+    if args.restore_from:
+        snap = replay_journal(args.restore_from)
+        sched.restore(snap, on_token=on_token)
+        live = sum(1 for r in snap["requests"] if r.get("status") == "live")
+        print(f"restored from journal {args.restore_from}: "
+              f"{len(snap['requests'])} requests replayed, {live} live "
+              "re-admitted through chunked prefill replay")
     if obs is not None:
         obs.tracer.start()          # no-op without --jax-profile
     try:
-        shed_rids, retries, drain_report = run_with_retries(
+        shed_rids, retries, drain_report, sched = run_with_retries(
             sched, arrivals, grace_ticks=args.grace_ticks,
-            max_retries=args.max_retries, backoff=args.backoff)
+            max_retries=args.max_retries, backoff=args.backoff,
+            crash_at_tick=args.crash_at_tick,
+            make_sched=make_sched if args.journal else None,
+            on_token=on_token)
         finished = sched.finished
     finally:
         if obs is not None:
@@ -519,6 +577,15 @@ def main():
               f"in-flight "
               f"{drain_report.shed_rids if drain_report.shed_rids else ''}"
               .rstrip())
+    if sched.quarantined:
+        print(f"quarantined {len(sched.quarantined)} poisoned requests "
+              f"{sorted(sched.quarantined)}; their pages were held for "
+              "forensics and released at shutdown")
+    if args.journal:
+        j = sched.journal
+        print(f"journal {args.journal}: {j.events_written} events, "
+              f"{j.bytes_written} bytes this run")
+        j.close()
     if obs is not None and obs.metrics.enabled:
         summary = obs.slo.summary(
             targets={"ttft_ticks": args.slo_ttft_ticks})

@@ -114,6 +114,8 @@ class SLOTracker:
         self.finished: List[Lifecycle] = []
         self.aborted: List[Lifecycle] = []
         self.abort_reasons: Dict[str, int] = {}
+        self.quarantined: List[Lifecycle] = []
+        self.quarantine_reasons: Dict[str, int] = {}
         self.shed_reasons: Dict[str, int] = {}
         self.shed_by_class: Dict[str, int] = {}
         self._prefix_lookups = False     # any prefix-cache hit reported
@@ -216,6 +218,23 @@ class SLOTracker:
         self.aborted.append(rec)
         self.abort_reasons[reason] = self.abort_reasons.get(reason, 0) + 1
 
+    def on_quarantine(self, req, tick: int, reason: str) -> None:
+        """The watchdog pulled a poisoned request (NaN/inf logits or a
+        faulted dispatch pinned on it) out of the batch. Terminal like an
+        abort, but tracked separately: quarantines indict the *model or
+        device*, not client behaviour, so mixing them into abort counts
+        would hide exactly the incidents this hook exists to surface."""
+        if not self.enabled:
+            return
+        rec = self._rec(req, tick)
+        rec.aborted = True
+        rec.abort_reason = f"quarantine:{reason}"
+        rec.done_tick = tick
+        rec.done_wall = time.perf_counter()
+        self.quarantined.append(rec)
+        self.quarantine_reasons[reason] = (
+            self.quarantine_reasons.get(reason, 0) + 1)
+
     # ------------------------------------------------------------------
     # aggregation
     # ------------------------------------------------------------------
@@ -269,6 +288,8 @@ class SLOTracker:
             out["sheds_by_class"] = dict(sorted(self.shed_by_class.items()))
         if self.abort_reasons:
             out["aborts"] = dict(sorted(self.abort_reasons.items()))
+        if self.quarantine_reasons:
+            out["quarantines"] = dict(sorted(self.quarantine_reasons.items()))
         for name, vals in series.items():
             out[name] = _pctls(vals)
         if targets:
@@ -293,8 +314,10 @@ class SLOTracker:
         # absence from the report is exactly the signal being measured
         classes = sorted({r.priority for r in fin}
                          | set(self.shed_by_class)
-                         | {r.priority for r in self.aborted})
-        if len(classes) > 1 or self.shed_by_class or self.aborted:
+                         | {r.priority for r in self.aborted}
+                         | {r.priority for r in self.quarantined})
+        if (len(classes) > 1 or self.shed_by_class or self.aborted
+                or self.quarantined):
             by_class = {}
             for cls in classes:
                 cfin = [r for r in fin if r.priority == cls]
@@ -305,6 +328,8 @@ class SLOTracker:
                     "preemptions": sum(r.preemptions for r in cfin),
                     "aborted": sum(1 for r in self.aborted
                                    if r.priority == cls),
+                    "quarantined": sum(1 for r in self.quarantined
+                                       if r.priority == cls),
                     "shed": self.shed_by_class.get(cls, 0),
                 }
                 for name in ("queue_wait_ticks", "ttft_ticks", "tpot_ticks",

@@ -50,6 +50,15 @@ class ServeConfig:
     greedy: bool = True
 
 
+class DispatchFault(RuntimeError):
+    """A serve_step dispatch failed before producing usable results.
+
+    Raised by the engine when an injected (or real) dispatch-level fault
+    fires; the scheduler's self-healing tick loop catches it, repacks,
+    and retries (``SchedulerConfig.tick_retries``) instead of letting one
+    bad dispatch kill every in-flight request."""
+
+
 class ServeEngine:
     def __init__(self, model: Model, params, cfg: ServeConfig = ServeConfig(),
                  fused_tasks: Optional[list] = None, peft=None):
@@ -91,6 +100,11 @@ class ServeEngine:
         # launcher reports dispatches/tick
         self.dispatches = 0
         self._m = None                  # optional obs per-kind counters
+        # one-shot injected dispatch fault (see inject_fault) + the tiny
+        # jitted per-slot finiteness check the watchdog reads every tick
+        self._pending_fault: Optional[Tuple[str, int]] = None
+        self._finite_rows = jax.jit(
+            lambda l: jnp.all(jnp.isfinite(l), axis=-1))
 
     def attach_metrics(self, registry) -> None:
         """Per-kind dispatch counters on an obs registry. Incremented on
@@ -107,6 +121,18 @@ class ServeEngine:
         self.dispatches += 1
         if self._m is not None:
             self._m[kind].inc()
+
+    def inject_fault(self, kind: str, slot: int = -1) -> None:
+        """Arm a ONE-SHOT dispatch fault consumed by the next
+        :meth:`serve_step` (fault-injection harness only — see
+        ``serve.faults``). ``"alloc_failure"`` raises :class:`DispatchFault`
+        before the device dispatch; ``"nan"`` poisons slot ``slot``'s
+        logits row with NaN *after* the jitted call and before the
+        watchdog's finiteness check — exactly where a real numerical fault
+        (bad page, overflowed accumulation) would surface."""
+        if kind not in ("nan", "alloc_failure"):
+            raise ValueError(f"unknown injected fault kind: {kind!r}")
+        self._pending_fault = (kind, slot)
 
     # ------------------------------------------------------------------
     def _peft_for(self, task_ids):
@@ -273,7 +299,14 @@ class ServeEngine:
         scheduler's two tick shapes make that at most four, however many
         prefills share the chunk budget).
         Returns (next token per slot (num_slots,) np, per-slot logits
-        (num_slots, V) still on device, new pool cache)."""
+        (num_slots, V) still on device, new pool cache, per-slot finite
+        flags (num_slots,) bool np — the watchdog input: False means that
+        slot's reported logits row contains NaN/inf and its token must not
+        be trusted)."""
+        fault, self._pending_fault = self._pending_fault, None
+        if fault is not None and fault[0] == "alloc_failure":
+            raise DispatchFault(
+                "injected allocation failure before dispatch (fault plan)")
         temps = np.asarray(sample[0])
         fn = self._serve_sampled if np.any(temps > 0.0) else self._serve_greedy
         toks, logits, cache = fn(
@@ -281,5 +314,8 @@ class ServeEngine:
             jnp.asarray(token_pos, np.int32), jnp.asarray(logit_idx, np.int32),
             cache, jnp.asarray(token_tasks, np.int32),
             jnp.asarray(block_tables, np.int32), *self._sample_vecs(sample))
+        if fault is not None:           # kind == "nan": poison post-jit,
+            logits = logits.at[fault[1]].set(jnp.nan)   # pre-watchdog
         self._count("serve_step")
-        return np.asarray(jax.device_get(toks)), logits, cache
+        finite = np.asarray(jax.device_get(self._finite_rows(logits)))
+        return np.asarray(jax.device_get(toks)), logits, cache, finite

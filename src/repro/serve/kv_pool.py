@@ -36,6 +36,26 @@ import numpy as np
 from repro.kernels.decode_attention import round_kv_len
 
 
+def chain_keys(task_id: int, toks, block_size: int,
+               nblocks: int) -> List[bytes]:
+    """Chained blake2b page keys for a task-scoped token prefix:
+    ``key_0 = H(task_id ‖ tokens[0:bs])``,
+    ``key_i = H(key_{i-1} ‖ tokens[i·bs:(i+1)·bs])``.
+
+    The content-identity primitive shared by the cross-request
+    :class:`PrefixCache` and :meth:`PagedKVPool.compact`: equal keys mean
+    equal (task, token-prefix), which — with the per-task bias being
+    position-independent — means bitwise-equal KV page contents."""
+    toks = np.asarray(toks, np.int32)
+    prev = b"task:%d" % task_id
+    keys: List[bytes] = []
+    for i in range(nblocks):
+        block = toks[i * block_size:(i + 1) * block_size].tobytes()
+        prev = hashlib.blake2b(prev + block, digest_size=16).digest()
+        keys.append(prev)
+    return keys
+
+
 def _write_slot_impl(pool_cache, req_cache, slot):
     """Copy a batch=1 prefill cache into ``slot`` of the pool cache.
 
@@ -289,15 +309,7 @@ class PrefixCache:
     # hashing
     # ------------------------------------------------------------------
     def _chain_keys(self, task_id: int, toks, nblocks: int) -> List[bytes]:
-        bs = self.block_size
-        toks = np.asarray(toks, np.int32)
-        prev = b"task:%d" % task_id
-        keys: List[bytes] = []
-        for i in range(nblocks):
-            block = toks[i * bs:(i + 1) * bs].tobytes()
-            prev = hashlib.blake2b(prev + block, digest_size=16).digest()
-            keys.append(prev)
-        return keys
+        return chain_keys(task_id, toks, self.block_size, nblocks)
 
     # ------------------------------------------------------------------
     # lookup / insert
@@ -554,6 +566,10 @@ class PagedKVPool:
         self.cow_copies = 0
         self.peak_pages = 0                 # high-water blocks_in_use
         self._seized: Set[int] = set()      # pages held by fault injection
+        self._quarantined: Set[int] = set()  # poisoned pages held for forensics
+        self.quarantined_pages_total = 0    # cumulative quarantine holds
+        self.compactions = 0                # compact() calls that freed pages
+        self.pages_deduped = 0              # pages freed by compact()
         self.prefix_cache: Optional[PrefixCache] = None
         self._m = None                      # optional obs instruments
 
@@ -590,6 +606,17 @@ class PagedKVPool:
                 "kv_page_refs_max", "max sharers of any one page"),
             "slots_used": registry.gauge(
                 "kv_slots_used", "occupied decode slots"),
+            "quarantined_total": registry.counter(
+                "kv_pages_quarantined_total",
+                "poisoned pages moved to the quarantine hold"),
+            "quarantined": registry.gauge(
+                "kv_pages_quarantined", "pages in the quarantine hold now"),
+            "compactions": registry.counter(
+                "kv_compactions_total",
+                "defrag passes that freed at least one page"),
+            "deduped": registry.counter(
+                "kv_pages_deduped_total",
+                "duplicate prompt pages freed by compaction"),
         }
         if self.prefix_cache is not None:
             self.prefix_cache.attach_metrics(registry)
@@ -606,6 +633,7 @@ class PagedKVPool:
         m["peak"].set_max(used)
         m["refs"].set(int(self._refs.max()))
         m["slots_used"].set(len(self._used_slots))
+        m["quarantined"].set(len(self._quarantined))
 
     # ------------------------------------------------------------------
     # capacity queries
@@ -628,6 +656,10 @@ class PagedKVPool:
     def num_seized(self) -> int:
         """Pages currently held by fault injection (see seize_pages)."""
         return len(self._seized)
+
+    def num_quarantined(self) -> int:
+        """Pages in the quarantine hold (see quarantine_slot)."""
+        return len(self._quarantined)
 
     def can_claim(self, npages: int, reserve: int = 0,
                   exclude_keys: Sequence[bytes] = ()) -> bool:
@@ -840,6 +872,107 @@ class PagedKVPool:
             self._m["freed"].inc(returned)
         self._gauge_sync()
 
+    def quarantine_slot(self, slot: int) -> int:
+        """:meth:`free` variant for poisoned requests (NaN/inf logits): the
+        slot returns to the free list, but every page the slot exclusively
+        owned goes to a quarantine hold instead — never reallocated, so
+        the KV that produced the bad logits stays dumpable for post-mortem
+        until :meth:`release_quarantined` (the scheduler's shutdown calls
+        it). Pages still shared with other slots or the prefix cache just
+        drop this slot's refcount as usual: their content is vouched for
+        by the surviving sharers. Returns the number of pages held."""
+        if slot not in self._used_slots:
+            raise ValueError(f"slot {slot} is not allocated")
+        self._used_slots.remove(slot)
+        if self.prefix_cache is not None:
+            self.prefix_cache.release_slot(slot)
+        held = 0
+        for page in reversed(self._pages.pop(slot)):
+            self._refs[page] -= 1
+            if self._refs[page] == 0:
+                self._quarantined.add(page)
+                held += 1
+        self.block_tables[slot] = 0
+        self.cur_len[slot] = 0
+        self.task_id[slot] = 0
+        self._free_slots.append(slot)
+        self.quarantined_pages_total += held
+        if self._m is not None:
+            self._m["quarantined_total"].inc(held)
+        self._gauge_sync()
+        return held
+
+    def release_quarantined(self) -> int:
+        """Return every quarantine-held page to the free list. Returns the
+        count released."""
+        n = len(self._quarantined)
+        self._free_blocks.extend(sorted(self._quarantined, reverse=True))
+        self._quarantined.clear()
+        if self._m is not None and n:
+            self._m["freed"].inc(n)
+        self._gauge_sync()
+        return n
+
+    def compact(self, slot_prompts: Dict[int, Any]) -> int:
+        """On-device paged-KV defrag: deduplicate identical full prompt
+        pages across committed slots by remapping block tables, so pages
+        fragmented across duplicate prompts come back without the cost of
+        preempt-and-recompute.
+
+        ``slot_prompts`` maps each candidate slot to its request's PROMPT
+        tokens (not the recompute suffix). Callers must pass only
+        *committed* slots (running decode rows) — never slots mid-prefill,
+        whose pages the ragged kernel is still scattering into. Safety of
+        the remap rests on three existing invariants: full prompt pages
+        below a slot's append page are append-only history and never
+        written again; content identity comes from the same chained hashes
+        the prefix cache trusts (equal key ⇒ bitwise-equal page); and
+        every future append goes through :meth:`ensure_append_page`, which
+        COWs any shared page before writing. Prefix-cache pages seed the
+        canonical-owner map, so duplicates fold into cached pages first
+        (refcounts keep them alive across eviction — no pinning needed).
+
+        Returns the number of pages returned to the free list."""
+        owner: Dict[bytes, int] = {}
+        if self.prefix_cache is not None:
+            for ent in self.prefix_cache._entries.values():
+                owner[ent.key] = ent.page
+        freed = 0
+        for slot in sorted(slot_prompts):
+            if slot not in self._used_slots:
+                continue
+            prompt = np.asarray(slot_prompts[slot])
+            nfull = len(prompt) // self.block_size
+            # belt and braces: never touch the page decode appends into
+            nfull = min(nfull, int(self.cur_len[slot]) // self.block_size,
+                        len(self._pages[slot]))
+            if nfull <= 0:
+                continue
+            keys = chain_keys(int(self.task_id[slot]), prompt,
+                              self.block_size, nfull)
+            pages = self._pages[slot]
+            for i, key in enumerate(keys):
+                page = pages[i]
+                canon = owner.setdefault(key, page)
+                if canon == page:
+                    continue
+                self._refs[canon] += 1
+                self._refs[page] -= 1
+                if self._refs[page] == 0:
+                    self._free_blocks.append(page)
+                    freed += 1
+                pages[i] = canon
+                self.block_tables[slot, i] = canon
+        if freed:
+            self.compactions += 1
+            self.pages_deduped += freed
+            if self._m is not None:
+                self._m["compactions"].inc()
+                self._m["deduped"].inc(freed)
+                self._m["freed"].inc(freed)
+            self._gauge_sync()
+        return freed
+
     # ------------------------------------------------------------------
     # cache writes
     # ------------------------------------------------------------------
@@ -965,16 +1098,23 @@ class PagedKVPool:
         if self._seized & (fb | mapped | cached):
             bad.append(f"seized pages also free, mapped, or cached: "
                        f"{sorted(self._seized & (fb | mapped | cached))}")
+        if self._quarantined & (fb | mapped | cached | self._seized):
+            bad.append(
+                f"quarantined pages also free, mapped, cached, or seized: "
+                f"{sorted(self._quarantined & (fb | mapped | cached | self._seized))}")
         if self._seized:
             bad.append(f"pages still seized by fault injection: "
                        f"{sorted(self._seized)}")
-        # cache-retained pages are accounted, NOT leaked: a warm cache is
-        # exactly the state a drained server should keep
+        # cache-retained and quarantine-held pages are accounted, NOT
+        # leaked: a warm cache is exactly the state a drained server
+        # should keep, and a quarantine hold is a deliberate forensic
+        # choice released explicitly (shutdown does). Seized pages by
+        # contrast are always a finding — a fault plan must restore them.
         leaked = set(range(1, self.num_blocks)) - (
-            fb | mapped | self._seized | cached)
+            fb | mapped | self._seized | cached | self._quarantined)
         if leaked:
-            bad.append(f"leaked pages (neither free, mapped, nor "
-                       f"cache-retained): {sorted(leaked)}")
+            bad.append(f"leaked pages (neither free, mapped, "
+                       f"cache-retained, nor quarantined): {sorted(leaked)}")
         return bad
 
     def check_no_leaks(self) -> None:

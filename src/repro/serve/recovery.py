@@ -1,0 +1,478 @@
+"""Crash-safe serving: request journal, scheduler snapshot/restore, replay.
+
+The serving process is a single point of failure for every task the fused
+backbone hosts, so PR 7's fault *injection* gets its missing half here:
+fault *recovery*. Three pieces, built entirely out of primitives the
+scheduler already guarantees:
+
+  * :class:`RequestJournal` — an append-only JSONL log of every request
+    lifecycle transition (submit / admit / emit / finish / shed / abort /
+    quarantine), flushed line-by-line so a ``kill -9`` between ticks loses
+    nothing that was already acknowledged to a client. A ``submit`` record
+    carries everything that determines the request's token stream — prompt,
+    task_id, SamplingParams (seed included), priority, deadline — and each
+    ``emit`` appends one generated token, so the journal alone replays the
+    full host-side state.
+  * :func:`replay_journal` / :func:`scheduler_snapshot` — two producers of
+    the same versioned snapshot dict: one reconstructs it from a journal
+    (the crash path), one captures it from a live scheduler (the planned
+    handoff path). KV pages are deliberately NOT serialized in either:
+    page contents die with the process, and the scheduler's
+    preempt-and-recompute path already proves a request's KV can be
+    rebuilt bitwise from ``prompt + out[:-1]`` — restore just rides it.
+  * :func:`scheduler_restore` — re-admits every surviving request into a
+    FRESH scheduler with its emitted tokens pre-populated. Admission then
+    treats each survivor exactly like a preempted request: chunked prefill
+    recomputes ``prompt + out[:-1]``, the pending token feeds back, and the
+    counter-based RNG stream resumes at ``fold_in(base, len(out))`` — so a
+    recovered stream is bitwise identical to an uninterrupted run, greedy
+    AND stochastic (enforced by the kill-at-any-tick soak in
+    tests/test_recovery.py).
+
+What restore intentionally does NOT preserve: tick/wall clocks (deadline
+budgets restart at restore — a crashed server cannot know how long it was
+down), the prefix cache (a pure optimization; it re-warms as recovered
+requests finish), and SLO lifecycle stamps of pre-crash work (their
+latencies happened on a process that no longer exists).
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+SNAPSHOT_VERSION = 1
+
+# terminal statuses a snapshot records; "live" requests get re-admitted
+TERMINAL_STATUSES = ("finished", "aborted", "shed", "quarantined")
+
+
+# ---------------------------------------------------------------------------
+# request (de)serialization
+# ---------------------------------------------------------------------------
+def _sampling_to_dict(sp) -> Optional[dict]:
+    if sp is None:
+        return None
+    return {"temperature": sp.temperature, "top_k": sp.top_k,
+            "top_p": sp.top_p, "n": sp.n, "seed": sp.seed,
+            "max_tokens": sp.max_tokens, "stop": list(sp.stop)}
+
+
+def _sampling_from_dict(d: Optional[dict]):
+    if d is None:
+        return None
+    from repro.serve.sampling import SamplingParams
+    return SamplingParams(
+        temperature=d["temperature"], top_k=d["top_k"], top_p=d["top_p"],
+        n=d["n"], seed=d["seed"], max_tokens=d["max_tokens"],
+        stop=tuple(d["stop"]))
+
+
+def request_record(req) -> dict:
+    """The JSON payload that fully determines a request's token stream.
+
+    Everything the RNG contract and the recompute path key on: prompt,
+    task, budget, eos/stop, priority/deadline, and the SamplingParams
+    (seed and ``n`` included). ``on_token`` callbacks are process-local
+    and cannot be serialized — restore re-attaches them."""
+    return {"rid": int(req.rid),
+            "prompt": np.asarray(req.prompt).tolist(),
+            "task_id": int(req.task_id),
+            "max_new_tokens": int(req.max_new_tokens),
+            "eos_id": None if req.eos_id is None else int(req.eos_id),
+            "priority": req.priority,
+            "deadline_ticks": req.deadline_ticks,
+            "sampling": _sampling_to_dict(req.sampling)}
+
+
+def _request_from_record(rec: dict):
+    from repro.serve.scheduler import Request
+    return Request(
+        rid=rec["rid"], prompt=np.asarray(rec["prompt"], np.int32),
+        task_id=rec["task_id"], max_new_tokens=rec["max_new_tokens"],
+        eos_id=rec["eos_id"], priority=rec["priority"],
+        deadline_ticks=rec["deadline_ticks"],
+        sampling=_sampling_from_dict(rec["sampling"]))
+
+
+# ---------------------------------------------------------------------------
+# the journal
+# ---------------------------------------------------------------------------
+class RequestJournal:
+    """Append-only JSONL lifecycle journal.
+
+    One JSON object per line; every write is flushed immediately, so after
+    a hard kill the file holds every event up to (at worst) one torn final
+    line — :func:`replay_journal` tolerates exactly that and nothing else.
+    Opened in append mode on purpose: a restarted server journals into the
+    same file, and restore writes ``submit`` records carrying the already-
+    emitted tokens (``out``), so a journal remains replayable across any
+    number of crash-restart cycles."""
+
+    enabled = True
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        self._f = open(self.path, "a", encoding="utf-8")
+        self.events_written = 0
+        self.bytes_written = 0
+
+    def _write(self, rec: dict) -> None:
+        line = json.dumps(rec, separators=(",", ":")) + "\n"
+        self._f.write(line)
+        self._f.flush()
+        self.events_written += 1
+        self.bytes_written += len(line)
+
+    # -- lifecycle events ----------------------------------------------
+    def submit(self, req, tick: int) -> None:
+        rec = {"ev": "submit", "tick": int(tick)}
+        rec.update(request_record(req))
+        self._write(rec)
+
+    def submit_restored(self, req, out: Dict[int, List[int]],
+                        done: Dict[int, bool]) -> None:
+        """A restore-time re-admission: a submit record that also carries
+        the tokens each sample had already emitted, so replaying a journal
+        that spans several crash-restart cycles still lands on the latest
+        state (a later submit record supersedes an earlier one)."""
+        rec = {"ev": "submit", "tick": 0, "restored": True}
+        rec.update(request_record(req))
+        rec["out"] = {str(i): list(v) for i, v in out.items()}
+        rec["done"] = {str(i): bool(v) for i, v in done.items()}
+        self._write(rec)
+
+    def admit(self, req, tick: int) -> None:
+        self._write({"ev": "admit", "rid": int(req.rid), "tick": int(tick)})
+
+    def emit(self, req, tok: int) -> None:
+        self._write({"ev": "emit", "rid": int(req.rid),
+                     "i": int(req.sample_idx), "t": int(tok)})
+
+    def finish(self, req) -> None:
+        self._write({"ev": "finish", "rid": int(req.rid),
+                     "i": int(req.sample_idx)})
+
+    def shed(self, rid: int, reason: str) -> None:
+        self._write({"ev": "shed", "rid": int(rid), "reason": reason})
+
+    def abort(self, rid: int, reason: str) -> None:
+        self._write({"ev": "abort", "rid": int(rid), "reason": reason})
+
+    def quarantine(self, rid: int, reason: str) -> None:
+        self._write({"ev": "quarantine", "rid": int(rid), "reason": reason})
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+
+class _NullJournal:
+    """No-op journal: the default. Every hook is a single attribute lookup
+    plus an empty call, so an unjournaled scheduler pays nothing — and
+    journaling on vs off is trivially bitwise-identical (host-side I/O
+    only, never inside jitted code)."""
+
+    enabled = False
+    path = None
+
+    def submit(self, req, tick): pass
+    def submit_restored(self, req, out, done): pass
+    def admit(self, req, tick): pass
+    def emit(self, req, tok): pass
+    def finish(self, req): pass
+    def shed(self, rid, reason): pass
+    def abort(self, rid, reason): pass
+    def quarantine(self, rid, reason): pass
+    def close(self): pass
+
+
+NULL_JOURNAL = _NullJournal()
+
+
+# ---------------------------------------------------------------------------
+# replay: journal -> snapshot
+# ---------------------------------------------------------------------------
+def _sample_count(rec: dict) -> int:
+    sp = rec.get("sampling")
+    return sp["n"] if sp else 1
+
+
+def _max_new(rec: dict) -> int:
+    sp = rec.get("sampling")
+    if sp and sp.get("max_tokens"):
+        return sp["max_tokens"]
+    return rec["max_new_tokens"]
+
+
+def _sample_done(rec: dict, out: List[int]) -> bool:
+    """Infer completion for a sample whose ``finish`` record may have been
+    lost in the crash (emitted, killed before the finish line flushed):
+    the emit log alone decides, by the scheduler's own stop conditions."""
+    if not out:
+        return False
+    if len(out) >= _max_new(rec):
+        return True
+    if rec["eos_id"] is not None and out[-1] == rec["eos_id"]:
+        return True
+    sp = rec.get("sampling")
+    return bool(sp and out[-1] in sp["stop"])
+
+
+def replay_journal(path: str) -> dict:
+    """Reconstruct a snapshot (see :func:`scheduler_snapshot`) from a
+    journal. Tolerates a torn FINAL line (a kill mid-write); a malformed
+    interior line means real corruption and raises."""
+    lines: List[str] = []
+    with open(path, "r", encoding="utf-8") as f:
+        lines = f.readlines()
+    events: List[dict] = []
+    for n, line in enumerate(lines):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            events.append(json.loads(line))
+        except json.JSONDecodeError:
+            if n == len(lines) - 1:
+                break               # torn tail from the crash itself
+            raise ValueError(
+                f"{path}: corrupt journal line {n + 1} (not the last line)")
+    recs: Dict[int, dict] = {}
+    order: List[int] = []
+    for e in events:
+        rid = e["rid"]
+        if e["ev"] == "submit":
+            if rid not in recs:
+                order.append(rid)
+            rec = {k: e[k] for k in (
+                "rid", "prompt", "task_id", "max_new_tokens", "eos_id",
+                "priority", "deadline_ticks", "sampling")}
+            rec["status"] = "live"
+            rec["reason"] = ""
+            rec["out"] = {int(i): list(v)
+                          for i, v in e.get("out", {}).items()}
+            rec["done"] = {int(i): bool(v)
+                           for i, v in e.get("done", {}).items()}
+            recs[rid] = rec         # a resubmit supersedes (shed -> retry)
+        elif e["ev"] == "emit":
+            recs[rid]["out"].setdefault(e["i"], []).append(e["t"])
+        elif e["ev"] == "finish":
+            recs[rid]["done"][e["i"]] = True
+        elif e["ev"] == "shed":
+            recs[rid]["status"], recs[rid]["reason"] = "shed", e["reason"]
+        elif e["ev"] == "abort":
+            recs[rid]["status"], recs[rid]["reason"] = "aborted", e["reason"]
+        elif e["ev"] == "quarantine":
+            recs[rid]["status"] = "quarantined"
+            recs[rid]["reason"] = e["reason"]
+        # "admit" records are informational (progress/forensics only)
+    for rec in recs.values():
+        if rec["status"] != "live":
+            continue
+        n = _sample_count(rec)
+        for i, out in rec["out"].items():
+            if _sample_done(rec, out):
+                rec["done"][i] = True
+        if all(rec["done"].get(i) for i in range(n)):
+            rec["status"] = "finished"
+    return {"version": SNAPSHOT_VERSION,
+            "requests": [recs[rid] for rid in order]}
+
+
+# ---------------------------------------------------------------------------
+# snapshot: live scheduler -> snapshot
+# ---------------------------------------------------------------------------
+def scheduler_snapshot(sched) -> dict:
+    """Capture a scheduler's host-side request state as a JSON-serializable
+    snapshot: queued requests (class queues), in-flight prefill progress,
+    per-slot running request state (emitted tokens per sample), and every
+    terminal record. Prefix-cache keys are recorded informationally (hex)
+    — KV pages themselves are never serialized, because restore recomputes
+    them through chunked prefill replay (the preempt-and-recompute path)."""
+    by_rid: Dict[int, dict] = {}
+    order: List[int] = []
+
+    def rec_for(req) -> dict:
+        root = req.parent if req.parent is not None else req
+        rec = by_rid.get(root.rid)
+        if rec is None:
+            rec = request_record(root)
+            rec.update(status="live", reason="", out={}, done={})
+            if root.samples:
+                for i, s in enumerate(root.samples):
+                    if s is not None:
+                        rec["out"][i] = list(s)
+                        rec["done"][i] = True
+            by_rid[root.rid] = rec
+            order.append(root.rid)
+        return rec
+
+    def add_live(req, progress: Optional[int] = None) -> None:
+        rec = rec_for(req)
+        rec["out"][req.sample_idx] = list(req.out)
+        if progress is not None:
+            rec["prefill_done"] = int(progress)
+
+    # admission order first (running oldest-first), then in-flight
+    # prefills, then the queue — restore re-admits in list order, so the
+    # requests that were furthest along recover their slots first
+    for slot in sorted(sched.running,
+                       key=lambda s: sched._admit_seq.get(s, 0)):
+        add_live(sched.running[slot])
+    for pf in sched._prefills:
+        add_live(pf.req, progress=pf.done)
+    for req in sched.queue:
+        add_live(req)
+
+    def add_terminal(req, status: str) -> None:
+        rec = rec_for(req)
+        rec["status"] = status
+        rec["reason"] = req.finish_reason
+        if req.samples:
+            for i, s in enumerate(req.samples):
+                if s is not None:
+                    rec["out"][i] = list(s)
+                    rec["done"][i] = True
+        else:
+            rec["out"][req.sample_idx] = list(req.out)
+            rec["done"][req.sample_idx] = True
+
+    for req in sched.finished.values():
+        add_terminal(req, "finished")
+    for req in sched.aborted.values():
+        add_terminal(req, "aborted")
+    for req in sched.shed.values():
+        add_terminal(req, "shed")
+    for req in getattr(sched, "quarantined", {}).values():
+        add_terminal(req, "quarantined")
+
+    snap = {"version": SNAPSHOT_VERSION, "ticks": int(sched.ticks),
+            "clock": int(sched.clock),
+            "requests": [by_rid[rid] for rid in order]}
+    cache = getattr(sched.pool, "prefix_cache", None)
+    if cache is not None:            # informational: restore starts cold
+        snap["prefix_cache_keys"] = [e.key.hex()
+                                     for e in cache._entries.values()]
+    return snap
+
+
+# ---------------------------------------------------------------------------
+# restore: snapshot -> fresh scheduler
+# ---------------------------------------------------------------------------
+def scheduler_restore(sched, snap: dict,
+                      on_token: Optional[Callable[[Any, int], None]] = None,
+                      ) -> Dict[str, int]:
+    """Re-admit a snapshot's surviving requests into a FRESH scheduler.
+
+    Live requests are requeued with their emitted tokens pre-populated, so
+    admission runs them down the existing recompute path (prefill
+    ``prompt + out[:-1]``, feed back ``out[-1]``, RNG resumes at
+    ``fold_in(base, len(out))``) — recovered streams are bitwise identical
+    to an uninterrupted run. Terminal records repopulate
+    ``finished`` / ``aborted`` / ``shed`` / ``quarantined`` so reporting
+    survives the restart. Restore bypasses the bounded-queue shed check on
+    purpose: survivors were already admitted once, and dropping them at
+    restore would turn a crash into data loss.
+
+    ``on_token`` (optional) is attached to every restored live request —
+    callbacks are process-local and cannot ride the snapshot. Only the
+    tokens generated AFTER restore stream through it; the pre-crash prefix
+    is already in ``req.out``. Returns per-status counts."""
+    from repro.serve.scheduler import (
+        ABORTED, FINISHED, QUARANTINED, SHED)
+    if snap.get("version") != SNAPSHOT_VERSION:
+        raise ValueError(f"unsupported snapshot version "
+                         f"{snap.get('version')!r}")
+    if sched.ticks or sched.busy() or sched.finished:
+        raise ValueError("restore needs a fresh, idle scheduler")
+    counts = {"live": 0, "finished": 0, "aborted": 0, "shed": 0,
+              "quarantined": 0}
+    terminal_state = {"finished": FINISHED, "aborted": ABORTED,
+                      "shed": SHED, "quarantined": QUARANTINED}
+    for rec in snap["requests"]:
+        out = {int(i): list(v) for i, v in rec["out"].items()}
+        done = {int(i): bool(v) for i, v in rec["done"].items()}
+        status = rec["status"]
+        counts[status] += 1
+        req = _request_from_record(rec)
+        if status != "live":
+            req.state = terminal_state[status]
+            req.finish_reason = rec["reason"]
+            n = _sample_count(rec)
+            if n > 1:
+                req.samples = [out.get(i) for i in range(n)]
+                req.out = list(req.samples[0] or [])
+            else:
+                req.out = out.get(0, [])
+            getattr(sched, status)[req.rid] = req
+            continue
+        _readmit(sched, req, out, done, on_token)
+    return counts
+
+
+def _readmit(sched, req, out: Dict[int, List[int]], done: Dict[int, bool],
+             on_token) -> None:
+    """Queue one surviving request (or its unfinished sample children)."""
+    from repro.serve.scheduler import QUEUED, RUNNING
+    sp = req.sampling
+    n = sp.n if sp is not None else 1
+    started = any(out.get(i) for i in range(n)) or any(done.values())
+    sched.journal.submit_restored(req, out, done)
+    if n == 1 or not started:
+        # a not-yet-installed n>1 parent re-expands at install exactly like
+        # a fresh submission; a single carries its emitted prefix along
+        req.out = out.get(0, [])
+        req.on_token = on_token
+        _enqueue_restored(sched, req)
+        return
+    # an installed n>1 group: finished samples land in the parent's
+    # aggregate, every unfinished sample requeues as an independent child
+    # (the scheduler's own pending-fork-child path) — counter-based
+    # streams make the tokens identical with or without page sharing
+    from repro.serve.scheduler import Request
+    req.state = RUNNING
+    req.samples = [out.get(i) if done.get(i) else None for i in range(n)]
+    for i in range(n):
+        if done.get(i):
+            continue
+        child = Request(
+            rid=req.rid, prompt=req.prompt, task_id=req.task_id,
+            max_new_tokens=req.max_new_tokens, eos_id=req.eos_id,
+            on_token=on_token, sampling=sp, priority=req.priority,
+            deadline_ticks=req.deadline_ticks, parent=req, sample_idx=i)
+        child.out = out.get(i, [])
+        _enqueue_restored(sched, child)
+
+
+def _enqueue_restored(sched, req) -> None:
+    """Direct enqueue: validation and SLO submit stamps apply, but the
+    bounded-queue/draining shed checks do not (see scheduler_restore)."""
+    from repro.serve.scheduler import QUEUED
+    import time
+    sched._validate(req)
+    req.state = QUEUED
+    req.slot = -1
+    req.finish_reason = ""
+    req.submit_tick = sched.ticks       # deadline budget restarts at restore
+    req.t_submit = time.perf_counter()
+    sched.queue.append(req)
+    sched._m_submitted.inc()
+    sched._m_queue.set(len(sched.queue))
+    sched.obs.slo.on_submit(req, sched.ticks)
+
+
+def write_snapshot(snap: dict, path: str) -> None:
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(snap, f)
+
+
+def read_snapshot(path: str) -> dict:
+    with open(path, "r", encoding="utf-8") as f:
+        snap = json.load(f)
+    # JSON round-trip stringifies the int sample-index keys
+    for rec in snap.get("requests", ()):
+        rec["out"] = {int(i): v for i, v in rec["out"].items()}
+        rec["done"] = {int(i): bool(v) for i, v in rec["done"].items()}
+    return snap

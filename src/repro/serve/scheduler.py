@@ -63,20 +63,26 @@ extra samples cost only their divergent decode pages.
 """
 from __future__ import annotations
 
+import math
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.obs import NULL_OBS, ServeObservability
 from repro.serve.engine import ServeEngine
 from repro.serve.kv_pool import PagedKVPool, SlotKVPool
+from repro.serve.recovery import NULL_JOURNAL, RequestJournal
 from repro.serve.sampling import SamplingParams, request_base_key
 
 QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
 ABORTED, SHED = "aborted", "shed"
+# terminal state for poisoned requests (NaN/inf logits): pages go to the
+# pool's quarantine hold instead of the free list, the rest of the batch
+# retries the tick — see ContinuousScheduler.quarantine
+QUARANTINED = "quarantined"
 
 # Priority classes, best first. Admission is strict-priority across classes
 # (FIFO within a class), the per-tick prefill budget guarantees the oldest
@@ -93,6 +99,26 @@ class InvalidRequest(ValueError):
     """A malformed submission, rejected at ``submit()`` before it can claim
     a slot, pages, or a place in the queue — never deep inside a tick.
     Subclasses ValueError so pre-existing callers' handlers keep working."""
+
+
+class InvalidConfig(ValueError):
+    """A malformed :class:`SchedulerConfig` knob or scheduler-API argument
+    (negative, NaN, or non-integral where a count is required), rejected
+    at construction / call time — never as a mid-drain surprise. The
+    config analog of :class:`InvalidRequest`."""
+
+
+def _check_count(name: str, v, minimum: int) -> int:
+    """Validate an integral, finite, bounded count knob -> plain int."""
+    if isinstance(v, bool) or not isinstance(
+            v, (int, float, np.integer, np.floating)):
+        raise InvalidConfig(f"{name} must be an integer (got {v!r})")
+    f = float(v)
+    if not math.isfinite(f) or f != int(f):
+        raise InvalidConfig(f"{name} must be a finite integer (got {v!r})")
+    if int(f) < minimum:
+        raise InvalidConfig(f"{name} must be >= {minimum} (got {v!r})")
+    return int(f)
 
 
 class ShedError(RuntimeError):
@@ -240,6 +266,11 @@ class SchedulerConfig:
                                         # alloc/refcount invariants when the
                                         # scheduler drains; findings land in
                                         # the obs metrics snapshot and raise
+    tick_retries: int = 2               # self-healing dispatch loop: how many
+                                        # times one tick may repack + retry
+                                        # after a faulted dispatch or a
+                                        # NaN-quarantine before the fault is
+                                        # re-raised to the caller
 
 
 @dataclass
@@ -270,6 +301,8 @@ class DrainReport:
     leak_findings: List[str]            # pool invariant sweep (empty = clean)
     cache_pages_released: int = 0       # prefix-cache pages flushed back to
                                         # the free list at shutdown
+    quarantined_pages_released: int = 0  # forensic quarantine hold released
+                                         # back to the free list at shutdown
 
     @property
     def clean(self) -> bool:
@@ -280,10 +313,19 @@ class ContinuousScheduler:
     """Drives a ServeEngine + KV pool over an online request stream."""
 
     def __init__(self, engine: ServeEngine, cfg: Optional[SchedulerConfig] = None,
-                 obs: Optional[ServeObservability] = None):
+                 obs: Optional[ServeObservability] = None,
+                 journal: Optional[RequestJournal] = None):
         # default constructed here, not in the signature: a shared default
         # instance would alias across schedulers (mutable-default footgun)
         cfg = cfg if cfg is not None else SchedulerConfig()
+        # reject malformed count knobs (negative / NaN / non-integral) at
+        # construction — never as a mid-drain surprise (InvalidConfig)
+        for knob, lo in (("num_slots", 1), ("bucket_min", 1),
+                         ("admit_per_step", 0), ("block_size", 1),
+                         ("num_blocks", 0), ("prefill_chunk", 0),
+                         ("max_prefills", 1), ("prefix_cache_pages", 0),
+                         ("max_queue", 0), ("tick_retries", 0)):
+            _check_count(f"SchedulerConfig.{knob}", getattr(cfg, knob), lo)
         mcfg = engine.model.cfg
         assert mcfg.causal, (
             "continuous batching pads prompts to buckets; that is only "
@@ -310,7 +352,6 @@ class ContinuousScheduler:
         assert not (cfg.prefill_chunk > 0 and cfg.kv_layout == "slots"), (
             "chunked prefill rides the unified paged serve step; "
             "kv_layout='slots' serves whole-prompt prefills only")
-        assert cfg.max_prefills >= 1, cfg.max_prefills
         self.engine = engine
         self.cfg = cfg
         self.max_len = engine.cfg.max_len
@@ -336,7 +377,15 @@ class ContinuousScheduler:
         self.shed: Dict[int, Request] = {}           # rid -> request refused
                                                      # or displaced from the
                                                      # bounded queue
+        self.quarantined: Dict[int, Request] = {}    # rid -> poisoned request
+                                                     # (NaN/inf logits; pages
+                                                     # in the pool's hold)
         self.deadline_misses = 0
+        self.dispatch_faults = 0        # serve_step calls that raised
+        self.tick_retries_used = 0      # repack+retry passes actually taken
+        # append-only lifecycle journal (crash recovery); NULL by default —
+        # every hook is then a no-op attribute call
+        self.journal = journal if journal is not None else NULL_JOURNAL
         self._draining = False
         self.slot_tokens = np.zeros((cfg.num_slots, 1), np.int32)
         # per-slot sampling vectors, threaded into the jitted decode step
@@ -426,6 +475,15 @@ class ContinuousScheduler:
             "validation (InvalidRequest)")
         self._m_draining = m.gauge(
             "sched_draining", "1 while shutdown() drains (submits shed)")
+        self._m_quarantined = m.counter(
+            "sched_quarantined_total", "requests quarantined by the NaN/inf "
+            "logits watchdog (terminal; pages held for forensics)")
+        self._m_tick_retries = m.counter(
+            "sched_tick_retries_total", "tick repack+retry passes taken by "
+            "the self-healing dispatch loop")
+        self._m_dispatch_faults = m.counter(
+            "sched_dispatch_faults_total", "serve_step dispatches that "
+            "raised (retried up to tick_retries, then re-raised)")
 
     @property
     def paged(self) -> bool:
@@ -495,6 +553,7 @@ class ContinuousScheduler:
         self.obs.slo.on_shed(req, self.ticks, reason)
         self.obs.tracer.instant("shed", rid=req.rid, reason=reason,
                                 priority=req.priority)
+        self.journal.shed(req.rid, reason)
 
     def submit(self, req: Request) -> None:
         """Validate and enqueue. Raises :class:`InvalidRequest` on a
@@ -531,6 +590,7 @@ class ContinuousScheduler:
         self._m_submitted.inc()
         self._m_queue.set(len(self.queue))
         self.obs.slo.on_submit(req, self.ticks)
+        self.journal.submit(req, self.ticks)
 
     def _bucket(self, length: int) -> int:
         b = self.cfg.bucket_min
@@ -548,6 +608,7 @@ class ContinuousScheduler:
         req.out.append(tok)
         self.tokens_emitted += 1
         self._m_tokens.inc()
+        self.journal.emit(req, tok)
         if req.on_token is not None:
             req.on_token(req, tok)
         sp = req.sampling
@@ -578,6 +639,7 @@ class ContinuousScheduler:
         self.obs.slo.on_finish(req, self.ticks)
         self.obs.tracer.instant("finish", rid=req.rid,
                                 sample=req.sample_idx, tokens=len(req.out))
+        self.journal.finish(req)
         if req.parent is not None:
             self._finish_sample(req)
         else:
@@ -759,6 +821,7 @@ class ContinuousScheduler:
         assert slot is not None
         self._m_admitted.inc()
         self.obs.slo.on_admit(req, self.ticks)
+        self.journal.admit(req, self.ticks)
         bucket = self._bucket(s)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :s] = toks_full
@@ -796,6 +859,7 @@ class ContinuousScheduler:
                                         tokens=cached)
         self._m_admitted.inc()
         self.obs.slo.on_admit(req, self.ticks)
+        self.journal.admit(req, self.ticks)
         self.slot_temps[slot] = 0.0     # draws armed on the final chunk only
         self._prefills.append(_Prefill(req=req, slot=slot,
                                        toks=np.asarray(toks, np.int32),
@@ -839,6 +903,24 @@ class ContinuousScheduler:
         self._preempt(max(victims, key=self._victim_key))
         return True
 
+    def _try_compact(self) -> bool:
+        """On-device paged-KV defrag as an admission rescue: when the pool
+        cannot cover a claim plus its reserve headroom, fold duplicate
+        full prompt pages across committed decode rows
+        (:meth:`PagedKVPool.compact`) before reaching for
+        preempt-and-recompute — dedup costs zero recompute and zero
+        dispatches (block tables remap host-side), preemption costs a full
+        prompt replay. Only running rows are offered: in-flight prefills'
+        pages are still being scattered into by the ragged kernel.
+        Returns True when compaction freed at least one page."""
+        if not self.paged or not self.running:
+            return False
+        freed = self.pool.compact(
+            {slot: req.prompt for slot, req in self.running.items()})
+        if freed:
+            self.obs.tracer.instant("compact", pages_freed=freed)
+        return freed > 0
+
     def _admission_tick(self) -> None:
         if self.cfg.prefill_chunk > 0:
             # starting a chunked prefill is pure host bookkeeping; up to
@@ -849,6 +931,10 @@ class ContinuousScheduler:
             while len(self._prefills) < self.cfg.max_prefills and self.queue:
                 head = self.queue[0]
                 if self._can_admit_chunked(head):
+                    self._start_chunked(self.queue.popleft())
+                elif self._try_compact() and self._can_admit_chunked(head):
+                    # defrag rescued the admission: duplicate prompt pages
+                    # folded together instead of preempting a decode row
                     self._start_chunked(self.queue.popleft())
                 elif not self._preempt_for_admission(head):
                     break
@@ -1037,6 +1123,64 @@ class ContinuousScheduler:
         self.obs.slo.on_abort(root, self.ticks, reason)
         self.obs.tracer.instant("abort", rid=rid, reason=reason,
                                 cancelled=len(found))
+        self.journal.abort(rid, reason)
+        return True
+
+    def _quarantine_slot(self, slot: int) -> None:
+        """Tear down one slot of a poisoned group: the slot frees, its
+        exclusively-owned pages go to the pool's quarantine hold."""
+        if self.paged:
+            self.pool.quarantine_slot(slot)
+        else:
+            self.pool.free(slot)
+        self.slot_temps[slot] = 0.0
+
+    def quarantine(self, rid: int, reason: str = "nan_logits") -> bool:
+        """Terminally remove a poisoned request — the watchdog's response
+        to NaN/inf logits. Mirrors :meth:`abort` (whole fork group, any
+        lifecycle state) with two deliberate differences: the request's
+        pages go to the pool's quarantine hold instead of the free list
+        (the KV that produced the bad logits stays dumpable until
+        ``shutdown`` or ``pool.release_quarantined()``), and the terminal
+        record lands in ``self.quarantined`` under the QUARANTINED state
+        with its own metric/SLO accounting. Partial output stays on the
+        request. Returns True if anything live was quarantined."""
+        found: List[Request] = []
+        for r in [r for r in self.queue if r.rid == rid]:
+            self.queue.remove(r)
+            found.append(r)
+        live_pfs = [pf for pf in self._prefills if pf.req.rid == rid]
+        if live_pfs:
+            self._prefills = [pf for pf in self._prefills
+                              if pf.req.rid != rid]
+            for pf in live_pfs:
+                self._quarantine_slot(pf.slot)
+                found.append(pf.req)
+        for slot, r in list(self.running.items()):
+            if r.rid == rid:
+                self.running.pop(slot)
+                self._admit_seq.pop(slot, None)
+                self._quarantine_slot(slot)
+                found.append(r)
+        if not found:
+            return False
+        root = next((r.parent for r in found if r.parent is not None),
+                    None) or found[0]
+        t_done = time.perf_counter()
+        for r in found:
+            r.state, r.slot, r.finish_reason = QUARANTINED, -1, reason
+            r.t_done = t_done
+        root.state, root.finish_reason = QUARANTINED, reason
+        root.t_done = t_done
+        self.quarantined[rid] = root
+        self._m_quarantined.inc()
+        self.obs.metrics.counter(
+            f"sched_quarantined_{reason}_total",
+            f"requests quarantined with reason={reason}").inc()
+        self.obs.slo.on_quarantine(root, self.ticks, reason)
+        self.obs.tracer.instant("quarantine", rid=rid, reason=reason,
+                                cancelled=len(found))
+        self.journal.quarantine(rid, reason)
         return True
 
     def _expire_deadlines(self) -> None:
@@ -1071,7 +1215,12 @@ class ContinuousScheduler:
         abort whatever remains (reason ``"shutdown"``, partial output kept
         on the request) and sweep the pool for leaks. Returns a
         :class:`DrainReport`; call sites that must fail loudly check
-        ``report.clean`` and the shed list."""
+        ``report.clean`` and the shed list.
+
+        ``grace_ticks`` is validated up front (:class:`InvalidConfig` on
+        negative/NaN/non-integral) — a bad drain budget must fail before
+        the scheduler stops admitting, not midway through the drain."""
+        grace_ticks = _check_count("grace_ticks", grace_ticks, 0)
         self._draining = True
         self._m_draining.set(1)
         start = self.ticks
@@ -1087,6 +1236,11 @@ class ContinuousScheduler:
         # releases every retained page) before the invariant sweep
         cache_released = (self.pool.flush_prefix_cache()
                           if self.paged else 0)
+        # the forensic quarantine hold does not outlive the process: a
+        # shut-down server returns every page (the hold exists to keep
+        # poisoned KV dumpable while the server is LIVE)
+        quarantine_released = (self.pool.release_quarantined()
+                               if self.paged else 0)
         findings = self.drain_check()
         if (self.cfg.check_leaks or self.obs.check_leaks) and findings:
             raise RuntimeError(
@@ -1094,11 +1248,32 @@ class ContinuousScheduler:
         report = DrainReport(
             finished=len(self.finished), shed_rids=shed_rids,
             grace_ticks_used=self.ticks - start, leak_findings=findings,
-            cache_pages_released=cache_released)
+            cache_pages_released=cache_released,
+            quarantined_pages_released=quarantine_released)
         self.obs.tracer.instant(
             "shutdown", grace=report.grace_ticks_used,
             shed=len(shed_rids), finished=report.finished)
         return report
+
+    # ------------------------------------------------------------------
+    # crash recovery (serve.recovery)
+    # ------------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Capture host-side request state (queues, prefill progress,
+        per-slot emitted tokens, terminal records) as a JSON-serializable
+        snapshot. KV pages are deliberately NOT serialized — restore
+        recomputes them through the preempt-and-recompute path. See
+        :func:`repro.serve.recovery.scheduler_snapshot`."""
+        from repro.serve.recovery import scheduler_snapshot
+        return scheduler_snapshot(self)
+
+    def restore(self, snap: dict, on_token=None) -> Dict[str, int]:
+        """Re-admit a snapshot's surviving requests into this (fresh, idle)
+        scheduler; recovered streams resume bitwise-identically to an
+        uninterrupted run. See
+        :func:`repro.serve.recovery.scheduler_restore`."""
+        from repro.serve.recovery import scheduler_restore
+        return scheduler_restore(self, snap, on_token=on_token)
 
     # ------------------------------------------------------------------
     def step(self) -> None:
@@ -1182,50 +1357,94 @@ class ContinuousScheduler:
         if self.running:
             with tr.span("ensure_pages", rows=len(self.running)):
                 self._ensure_pages()    # may preempt rows / abort prefills
-        pfs = self._prefills
-        if not self.running and not pfs:
+        if not self.running and not self._prefills:
             return
         ns, qw = self.cfg.num_slots, self._qw
-        # two static packed widths (decode-only ticks cost exactly the old
-        # decode call; chunk ticks add qw - 1 — the qw-token shared budget,
-        # split across however many prefills are in flight, minus the one
-        # slot a prefill always occupies instead of a decode row) x
-        # serve_step's greedy/sampled traces = at most four compilations
-        # over a scheduler's lifetime
-        T = ns - 1 + qw if pfs else ns
-        tokens = np.zeros((T, 1), np.int32)
-        token_rows = np.zeros(T, np.int32)
-        token_pos = np.full(T, -1, np.int32)     # -1 = dead padding token
-        logit_idx = np.zeros(ns, np.int32)
-        with tr.span("pack_budget_split", decode_rows=len(self.running),
-                     prefills=len(pfs), width=T):
-            t = 0
-            for slot, req in self.running.items():
-                tokens[t, 0] = self.slot_tokens[slot, 0]
-                token_rows[t] = slot
-                token_pos[t] = self.pool.cur_len[slot]
-                logit_idx[slot] = t
-                self.slot_steps[slot] = len(req.out)
-                t += 1
-            shares = self._split_budget()
-            for pf, n in zip(pfs, shares):
-                if n == 0:          # budget spent by shorter prefills
-                    continue
-                lo = pf.done
-                tokens[t:t + n, 0] = pf.toks[lo:lo + n]
-                token_rows[t:t + n] = pf.slot
-                token_pos[t:t + n] = np.arange(lo, lo + n)
-                if lo + n >= pf.length:
-                    logit_idx[pf.slot] = t + n - 1   # prompt's last token
-                    self._arm_first_draw(pf.req, pf.slot)
-                t += n
-        sample = (self.slot_temps, self.slot_topk, self.slot_topp,
-                  self.slot_keys, self.slot_steps)
+        # ---- the self-healing dispatch loop --------------------------
+        # Pack + dispatch run inside a retry loop. A dispatch that RAISES
+        # (device fault, injected alloc failure) mutated no host state —
+        # pool.cache is only replaced on success — so the tick simply
+        # repacks and retries, up to cfg.tick_retries, then re-raises.
+        # A dispatch that returns NON-FINITE logits for a live row (the
+        # watchdog check: real NaN/inf or an injected poison) quarantines
+        # that row's whole request group and retries with the survivors —
+        # their retry tokens are bitwise identical to a never-poisoned
+        # tick because the inputs (pool cache, fed-back tokens, RNG
+        # counters) are all unchanged. Quarantine shrinks the batch every
+        # pass, so the NaN path terminates without a retry budget.
+        faults = 0
+        while True:
+            pfs = self._prefills
+            if not self.running and not pfs:
+                return              # everything quarantined away mid-tick
+            # two static packed widths (decode-only ticks cost exactly the
+            # old decode call; chunk ticks add qw - 1 — the qw-token shared
+            # budget, split across however many prefills are in flight,
+            # minus the one slot a prefill always occupies instead of a
+            # decode row) x serve_step's greedy/sampled traces = at most
+            # four compilations over a scheduler's lifetime
+            T = ns - 1 + qw if pfs else ns
+            tokens = np.zeros((T, 1), np.int32)
+            token_rows = np.zeros(T, np.int32)
+            token_pos = np.full(T, -1, np.int32)     # -1 = dead padding
+            logit_idx = np.zeros(ns, np.int32)
+            finishing: List[_Prefill] = []  # final chunk lands this tick
+            with tr.span("pack_budget_split", decode_rows=len(self.running),
+                         prefills=len(pfs), width=T):
+                t = 0
+                for slot, req in self.running.items():
+                    tokens[t, 0] = self.slot_tokens[slot, 0]
+                    token_rows[t] = slot
+                    token_pos[t] = self.pool.cur_len[slot]
+                    logit_idx[slot] = t
+                    self.slot_steps[slot] = len(req.out)
+                    t += 1
+                shares = self._split_budget()
+                for pf, n in zip(pfs, shares):
+                    if n == 0:      # budget spent by shorter prefills
+                        continue
+                    lo = pf.done
+                    tokens[t:t + n, 0] = pf.toks[lo:lo + n]
+                    token_rows[t:t + n] = pf.slot
+                    token_pos[t:t + n] = np.arange(lo, lo + n)
+                    if lo + n >= pf.length:
+                        logit_idx[pf.slot] = t + n - 1  # prompt's last token
+                        self._arm_first_draw(pf.req, pf.slot)
+                        finishing.append(pf)
+                    t += n
+            sample = (self.slot_temps, self.slot_topk, self.slot_topp,
+                      self.slot_keys, self.slot_steps)
+            try:
+                with tr.span("dispatch", tokens=int(t), width=T):
+                    toks, logits, cache, finite = self.engine.serve_step(
+                        tokens, token_rows, token_pos, logit_idx,
+                        self.pool.cache, self.pool.block_tables,
+                        self.pool.task_id[token_rows], sample)
+            except Exception as e:
+                self.dispatch_faults += 1
+                self._m_dispatch_faults.inc()
+                tr.instant("dispatch_fault", error=type(e).__name__)
+                faults += 1
+                if faults > self.cfg.tick_retries:
+                    raise
+                self.tick_retries_used += 1
+                self._m_tick_retries.inc()
+                continue
+            # watchdog: only rows whose logits this tick actually reports
+            # are consulted — active decode rows, and prefills completing
+            # their final chunk (other slots' logit_idx defaults to 0 and
+            # would alias row 0's logits)
+            bad = {req.rid for slot, req in self.running.items()
+                   if not finite[slot]}
+            bad |= {pf.req.rid for pf in finishing if not finite[pf.slot]}
+            if not bad:
+                break
+            for rid in sorted(bad):
+                self.quarantine(rid, reason="nan_logits")
+            self.tick_retries_used += 1
+            self._m_tick_retries.inc()
+            # the poisoned dispatch's outputs (cache included) are dropped
         self._m_tick_tokens.observe(t)      # real tokens; T - t are dead
-        with tr.span("dispatch", tokens=int(t), width=T):
-            toks, logits, cache = self.engine.serve_step(
-                tokens, token_rows, token_pos, logit_idx, self.pool.cache,
-                self.pool.block_tables, self.pool.task_id[token_rows], sample)
         self.pool.cache = cache
         with tr.span("postprocess"):
             active = list(self.running.items())
@@ -1244,8 +1463,8 @@ class ContinuousScheduler:
                         self._finish(req)
             still: List[_Prefill] = []
             for pf, n in zip(pfs, shares):
-                if pf.req.state == ABORTED:
-                    continue        # aborted mid-tick; pages already freed
+                if pf.req.state in (ABORTED, QUARANTINED):
+                    continue        # torn down mid-tick; pages already gone
                 if n == 0:
                     still.append(pf)
                     continue
@@ -1268,7 +1487,7 @@ class ContinuousScheduler:
             # an on_token abort during an install above rebuilt
             # self._prefills; don't resurrect an aborted entry from `still`
             self._prefills = [pf for pf in still
-                              if pf.req.state != ABORTED]
+                              if pf.req.state not in (ABORTED, QUARANTINED)]
         self.peak_running = max(self.peak_running, len(self.running))
         if tr.enabled and self.paged:
             tr.counter("pages", used=self.pool.blocks_in_use(),

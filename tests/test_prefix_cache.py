@@ -71,7 +71,12 @@ def _ref(eng, req):
 
 
 def _tokens(rng, n):
-    return rng.integers(0, 200, n).astype(np.int32)
+    # in-vocab ids only (the reduced test vocab is 128): out-of-range ids
+    # embed to garbage and the whole logits row goes NaN — which the
+    # dispatch watchdog now (correctly) quarantines. In-vocab tokens also
+    # make the bitwise-parity assertions non-vacuous: argmax over real
+    # logits instead of argmax over NaN (= 0) on both sides.
+    return rng.integers(0, 128, n).astype(np.int32)
 
 
 # ---------------------------------------------------------------------------
