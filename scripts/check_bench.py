@@ -21,7 +21,11 @@ combination of:
   ``min`` / ``max``                    -- inclusive bounds
 
 A missing path fails (a metric silently vanishing from the benchmark is
-itself a regression). Exit status 0 iff every rule passes.
+itself a regression). So do the silent-hole cases: a rule with no
+``expect``/``min``/``max`` constraint at all (vacuous — it gates
+nothing), a rule with an unknown field (``expectt: 1.0`` would otherwise
+be ignored forever), and a path resolving to a non-numeric value the
+comparisons can't apply to. Exit status 0 iff every rule passes.
 
 Usage:
     python scripts/check_bench.py [--bench BENCH_serve.json]
@@ -52,9 +56,28 @@ def lookup(obj, path: str):
     return cur
 
 
+KNOWN_FIELDS = {"expect", "abs", "rel", "min", "max", "why"}
+CONSTRAINT_FIELDS = {"expect", "min", "max"}
+
+
+def validate_rule(rule: dict):
+    """Structural failures that make a rule a gate that never gates."""
+    fails = []
+    unknown = sorted(set(rule) - KNOWN_FIELDS)
+    if unknown:
+        fails.append(f"unknown field(s) {', '.join(unknown)} "
+                     f"(typo? known: {', '.join(sorted(KNOWN_FIELDS))})")
+    if not set(rule) & CONSTRAINT_FIELDS:
+        fails.append("no expect/min/max constraint: rule is vacuous")
+    return fails
+
+
 def check_rule(value, rule: dict):
     """Return a list of failure strings (empty == pass)."""
     fails = []
+    if not isinstance(value, (int, float)) or isinstance(value, bool):
+        return [f"got non-numeric value {value!r} "
+                f"({type(value).__name__}); cannot gate"]
     if "expect" in rule:
         want = rule["expect"]
         tol = max(abs(rule.get("abs", 0.0)),
@@ -86,10 +109,17 @@ def main(argv=None) -> int:
     failures = 0
     for path in sorted(rules):
         rule = rules[path]
+        fails = validate_rule(rule)
+        if fails:
+            for msg in fails:
+                print(f"FAIL {path}: {msg}")
+            failures += 1
+            continue
         try:
             value = lookup(bench, path)
         except (KeyError, IndexError, ValueError):
-            print(f"FAIL {path}: missing from {os.path.basename(args.bench)}")
+            print(f"FAIL {path}: missing from {os.path.basename(args.bench)}"
+                  " (stale gate: the rule's key path no longer resolves)")
             failures += 1
             continue
         fails = check_rule(value, rule)

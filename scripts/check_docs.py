@@ -1,24 +1,83 @@
 #!/usr/bin/env python
-"""Docs link checker: fail CI when README.md / docs/*.md reference files
-that don't exist.
+"""Docs checker: fail CI when README.md / docs/*.md reference files that
+don't exist, or document CLI flags that no argparse defines.
 
-Checks every relative markdown link and image (``[text](target)``) in
-``README.md`` and ``docs/*.md``. External links (http/https/mailto) are
-skipped — CI shouldn't flake on the network; pure in-page anchors
+Link check: every relative markdown link and image (``[text](target)``)
+in ``README.md`` and ``docs/*.md``. External links (http/https/mailto)
+are skipped — CI shouldn't flake on the network; pure in-page anchors
 (``#section``) are skipped too. A relative target must exist on disk,
 resolved against the file that references it; an optional ``#anchor``
 suffix is ignored for existence checking.
+
+Flag check: every ``--flag`` token mentioned in ``docs/serving.md`` and
+``docs/robustness.md`` (including inside fenced command examples — that's
+where flags live) must be an option string some ``add_argument`` call in
+``src/repro/launch/serve.py`` or ``benchmarks/multitask_throughput.py``
+actually registers. Nine PRs of serving surface is plenty of room for a
+renamed flag to leave a stale invocation in the docs.
 
     python scripts/check_docs.py            # from the repo root
 """
 from __future__ import annotations
 
+import ast
 import re
 import sys
 from pathlib import Path
 
 LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
 SKIP = ("http://", "https://", "mailto:")
+
+# docs whose --flags must exist, and the argparse modules defining them
+FLAG_DOCS = ("docs/serving.md", "docs/robustness.md")
+FLAG_SOURCES = ("src/repro/launch/serve.py",
+                "benchmarks/multitask_throughput.py")
+FLAG = re.compile(r"(?<![\w-])(--[a-z][a-z0-9-]*)")
+
+
+def argparse_flags(root: Path):
+    """Option strings from every ``add_argument("--x", ...)`` call in the
+    FLAG_SOURCES modules, read via ast so nothing gets imported (serve.py
+    pulls in jax; this script must stay stdlib-only for the lint CI job).
+    """
+    flags = set()
+    for rel in FLAG_SOURCES:
+        path = root / rel
+        if not path.exists():
+            continue
+        tree = ast.parse(path.read_text(encoding="utf-8"), filename=rel)
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "add_argument"):
+                continue
+            for arg in node.args:
+                if isinstance(arg, ast.Constant) \
+                        and isinstance(arg.value, str) \
+                        and arg.value.startswith("--"):
+                    flags.add(arg.value)
+    return flags
+
+
+def check_flags(root: Path):
+    """(bad, checked): doc flags missing from every argparse source."""
+    known = argparse_flags(root)
+    bad = []
+    checked = 0
+    for rel in FLAG_DOCS:
+        md = root / rel
+        if not md.exists():
+            continue
+        # NOTE: scan the ORIGINAL text — flags live in fenced examples
+        for i, line in enumerate(
+                md.read_text(encoding="utf-8").splitlines(), start=1):
+            for flag in FLAG.findall(line):
+                checked += 1
+                if flag not in known:
+                    bad.append(f"{rel}:{i}: documented flag {flag} is not "
+                               f"defined by any add_argument in "
+                               f"{' / '.join(FLAG_SOURCES)}")
+    return bad, checked
 
 
 def doc_files(root: Path):
@@ -51,11 +110,13 @@ def check(root: Path) -> int:
                 line = text[:m.start()].count("\n") + 1
                 bad.append(f"{md.relative_to(root)}:{line}: dead link "
                            f"-> {target}")
+    flag_bad, flag_checked = check_flags(root)
+    bad.extend(flag_bad)
     for msg in bad:
         print(msg, file=sys.stderr)
     print(f"checked {checked} relative links across "
-          f"{len(doc_files(root))} files: "
-          f"{'FAIL' if bad else 'ok'}")
+          f"{len(doc_files(root))} files and {flag_checked} documented "
+          f"flags: {'FAIL' if bad else 'ok'}")
     return 1 if bad else 0
 
 

@@ -1,0 +1,92 @@
+#!/usr/bin/env python
+"""repro-lint CLI — run the AST invariant checks over the tree.
+
+Usage:
+    python scripts/lint_repro.py                 # warn-ish: new findings fail
+    python scripts/lint_repro.py --strict        # CI mode: stale baseline
+                                                 # entries fail too
+    python scripts/lint_repro.py --rules jit-purity,wallclock
+    python scripts/lint_repro.py --paths src/repro/serve
+    python scripts/lint_repro.py --write-baseline  # accept current findings
+
+Stdlib-only on purpose: the CI lint job runs this without installing jax.
+Exit code 0 = clean (modulo baseline), 1 = findings/stale entries,
+2 = usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+
+from repro.analysis import (ALL_RULES, LintConfig, load_baseline,  # noqa: E402
+                            run_lint, write_baseline)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--strict", action="store_true",
+                    help="fail on stale baseline entries as well")
+    ap.add_argument("--paths", default=None,
+                    help="comma-separated roots to lint "
+                         "(default: src/repro,scripts,tests)")
+    ap.add_argument("--rules", default=None,
+                    help=f"comma-separated rule subset of: "
+                         f"{','.join(ALL_RULES)}")
+    ap.add_argument("--baseline",
+                    default=os.path.join("scripts", "lint_baseline.json"),
+                    help="allowlist baseline path (repo-relative)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept all current findings into the baseline")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress the per-category summary")
+    args = ap.parse_args(argv)
+
+    kwargs = {"root": REPO_ROOT}
+    if args.paths:
+        kwargs["paths"] = tuple(p.strip() for p in args.paths.split(",")
+                                if p.strip())
+    if args.rules:
+        rules = tuple(r.strip() for r in args.rules.split(",") if r.strip())
+        unknown = sorted(set(rules) - set(ALL_RULES))
+        if unknown:
+            print(f"unknown rule(s): {', '.join(unknown)}", file=sys.stderr)
+            return 2
+        kwargs["rules"] = rules
+    cfg = LintConfig(**kwargs)
+
+    baseline_path = os.path.join(REPO_ROOT, args.baseline)
+    result = run_lint(cfg, baseline=load_baseline(baseline_path))
+
+    if args.write_baseline:
+        write_baseline(baseline_path, result.violations
+                       + result.baselined)
+        print(f"wrote {len(result.violations) + len(result.baselined)} "
+              f"fingerprint(s) to {args.baseline}")
+        return 0
+
+    for v in result.parse_errors:
+        print(v.render())
+    for v in result.violations:
+        print(v.render())
+    if args.strict:
+        for fp in result.stale_baseline:
+            print(f"{args.baseline}:1 stale-baseline allowlist entry "
+                  f"matches nothing: {fp}")
+
+    if not args.quiet:
+        print(f"repro-lint: {len(result.violations)} finding(s), "
+              f"{len(result.baselined)} baselined, "
+              f"{len(result.suppressed)} pragma-suppressed, "
+              f"{len(result.stale_baseline)} stale baseline entr"
+              f"{'y' if len(result.stale_baseline) == 1 else 'ies'}, "
+              f"{len(result.parse_errors)} parse error(s)")
+
+    return 1 if result.failed(strict=args.strict) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,10 @@
+"""repro-lint: stdlib-only static analysis for the serving stack's
+invariants. See docs/static-analysis.md for the rule catalog; the CLI
+entry point is scripts/lint_repro.py."""
+from repro.analysis.base import ParsedFile, Pragma, Project, Violation
+from repro.analysis.runner import (ALL_RULES, LintConfig, LintResult,
+                                   load_baseline, run_lint, write_baseline)
+
+__all__ = ["ParsedFile", "Pragma", "Project", "Violation", "ALL_RULES",
+           "LintConfig", "LintResult", "load_baseline", "run_lint",
+           "write_baseline"]

@@ -1,0 +1,260 @@
+"""Jit entry-point discovery and a project-wide call-graph walk.
+
+The jit-purity and tracer-control-flow rules reason about *traced* code:
+functions handed to ``jax.jit`` / ``jax.pmap`` or used as Pallas kernels
+(``pl.pallas_call``), plus everything statically reachable from them.
+Resolution is deliberately name-based and over-approximate — a linter
+wants to err toward looking inside too many functions rather than miss a
+``print`` buried two calls deep — with two dampers that keep the
+over-approximation from exploding:
+
+  * attribute chains rooted at known array/stdlib libraries
+    (``jnp.x.y``, ``np.``, ``jax.``, ``math.``) are never resolved into
+    project code;
+  * terminal names that collide with ubiquitous container/array methods
+    (``get``, ``set``, ``append``, ``update``, ``sum`` …) are never
+    resolved by bare name — only an unambiguous project-defined helper
+    with a distinctive name is traversed.
+
+Entry points recognized per file:
+
+  * ``jax.jit(f)`` / ``jit(f)`` call arguments (through
+    ``functools.partial(f, ...)`` wrappers), including ``self._impl``
+    method references;
+  * ``@jax.jit`` / ``@partial(jax.jit, ...)`` decorated defs;
+  * first argument of ``pl.pallas_call(kernel, ...)`` (again through
+    ``partial``);
+  * lambdas in any of those positions (analyzed inline).
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Set, Tuple, Union
+
+from repro.analysis.base import ParsedFile, Project, dotted_chain
+
+FuncNode = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+
+# library roots whose attribute calls are never project code
+LIB_ROOTS = {"jax", "jnp", "np", "numpy", "lax", "pl", "plgpu", "math",
+             "functools", "jtu", "os", "sys", "json", "re", "ast"}
+
+# terminal names too generic to resolve by name across the project:
+# builtin container/array methods that would otherwise drag half the
+# host-side codebase into every traced call graph
+GENERIC_NAMES = {
+    "get", "set", "update", "append", "appendleft", "add", "pop", "popleft",
+    "items", "keys", "values", "extend", "remove", "insert", "index",
+    "count", "sort", "copy", "clear", "join", "split", "format", "replace",
+    "startswith", "endswith", "strip", "astype", "reshape", "transpose",
+    "squeeze", "ravel", "flatten", "sum", "mean", "max", "min", "all",
+    "any", "dot", "tolist", "item", "read", "write", "close", "flush",
+    "setdefault", "extendleft",
+}
+
+BUILTINS = {"int", "float", "bool", "str", "len", "range", "zip", "tuple",
+            "enumerate", "list", "dict", "set", "frozenset", "sorted",
+            "min", "max", "abs", "sum", "isinstance", "getattr", "hasattr",
+            "type", "super", "print", "repr", "round", "map", "filter",
+            "reversed", "iter", "next", "id", "vars", "callable", "open"}
+
+# jax combinators whose FUNCTION ARGUMENT is traced: a reference passed to
+# one of these is as much an entry edge as a direct call
+TRACING_COMBINATORS = {"vmap", "pmap", "scan", "while_loop", "fori_loop",
+                       "cond", "switch", "checkpoint", "remat", "grad",
+                       "value_and_grad", "custom_vjp", "shard_map"}
+
+
+@dataclass(frozen=True)
+class DefSite:
+    """One function/method definition: where it lives and its class."""
+    file: ParsedFile
+    node: FuncNode
+    cls: Optional[str]          # enclosing class name, None at module level
+
+    @property
+    def name(self) -> str:
+        return getattr(self.node, "name", "<lambda>")
+
+
+@dataclass
+class DefIndex:
+    """Project-wide map of function definitions, by name and by class."""
+    by_name: Dict[str, List[DefSite]] = field(default_factory=dict)
+    by_class: Dict[Tuple[str, str], List[DefSite]] = field(
+        default_factory=dict)     # (class name, method name) -> sites
+    module_scope: Dict[Tuple[str, str], DefSite] = field(
+        default_factory=dict)     # (file rel, func name) -> site
+
+
+def build_index(project: Project) -> DefIndex:
+    idx = DefIndex()
+
+    def visit(file: ParsedFile, node: ast.AST, cls: Optional[str]) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                site = DefSite(file, child, cls)
+                idx.by_name.setdefault(child.name, []).append(site)
+                if cls is not None:
+                    idx.by_class.setdefault((cls, child.name),
+                                            []).append(site)
+                else:
+                    idx.module_scope[(file.rel, child.name)] = site
+                # nested defs resolve by name only (rare, best-effort)
+                visit(file, child, cls)
+            elif isinstance(child, ast.ClassDef):
+                visit(file, child, child.name)
+
+    for file in project.files.values():
+        visit(file, file.tree, None)
+    return idx
+
+
+def _unwrap_partial(call: ast.expr) -> Optional[ast.expr]:
+    """``functools.partial(f, ...)`` / ``partial(f, ...)`` -> ``f``."""
+    if isinstance(call, ast.Call) and call.args:
+        chain = dotted_chain(call.func)
+        if chain and chain[-1] == "partial":
+            return call.args[0]
+    return None
+
+
+def _is_jit_ref(node: ast.expr) -> bool:
+    chain = dotted_chain(node)
+    return bool(chain) and chain[-1] in {"jit", "pmap"}
+
+
+def _func_refs(node: ast.expr) -> List[ast.expr]:
+    """The function-reference expressions a jit/pallas wrapper hands to
+    the tracer (unwrapping one layer of partial)."""
+    inner = _unwrap_partial(node)
+    if inner is not None:
+        return [inner]
+    return [node]
+
+
+def entry_points(file: ParsedFile) -> List[Tuple[ast.expr, int]]:
+    """Expressions referencing traced functions in ``file``: jit call
+    arguments, jit decorators (reported as the def's own Name), and
+    pallas_call kernel arguments. Returns (reference expr, lineno)."""
+    refs: List[Tuple[ast.expr, int]] = []
+    for node in ast.walk(file.tree):
+        if isinstance(node, ast.Call):
+            chain = dotted_chain(node.func)
+            if _is_jit_ref(node.func) and node.args:
+                for ref in _func_refs(node.args[0]):
+                    refs.append((ref, node.lineno))
+            elif chain and chain[-1] == "pallas_call" and node.args:
+                for ref in _func_refs(node.args[0]):
+                    refs.append((ref, node.lineno))
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                target = dec
+                if isinstance(dec, ast.Call):
+                    # @partial(jax.jit, ...) — the jit ref is partial's
+                    # first argument, the traced fn is the def itself
+                    inner = _unwrap_partial(dec)
+                    if inner is not None and _is_jit_ref(inner):
+                        target = inner
+                    else:
+                        target = dec.func
+                if _is_jit_ref(target):
+                    refs.append((ast.Name(id=node.name, ctx=ast.Load(),
+                                          lineno=node.lineno,
+                                          col_offset=0), node.lineno))
+    return refs
+
+
+def resolve_ref(ref: ast.expr, file: ParsedFile, cls: Optional[str],
+                idx: DefIndex) -> List[DefSite]:
+    """A function-reference expression -> candidate definition sites.
+
+    Resolution order: lambda (inline) > same-class method (``self.x``) >
+    same-module function > project-wide by distinctive name. Unresolvable
+    references (locals, library functions) resolve to nothing — a linter
+    should stay silent rather than guess wildly."""
+    if isinstance(ref, ast.Lambda):
+        return [DefSite(file, ref, cls)]
+    chain = dotted_chain(ref)
+    if not chain:
+        return []
+    name = chain[-1]
+    if chain[0] in LIB_ROOTS and len(chain) > 1:
+        return []
+    if name in BUILTINS:
+        return []
+    if len(chain) >= 2 and chain[0] == "self" and cls is not None:
+        sites = idx.by_class.get((cls, name))
+        if sites:
+            return sites
+    site = idx.module_scope.get((file.rel, name))
+    if site is not None:
+        return [site]
+    if name in GENERIC_NAMES:
+        return []
+    return idx.by_name.get(name, [])
+
+
+def called_refs(fn: FuncNode) -> List[ast.expr]:
+    """Function references invoked (or handed to a tracing combinator)
+    inside ``fn``, excluding nested defs' bodies? No — nested defs ARE
+    part of the traced computation (closures built inside a jitted fn run
+    under the trace), so the whole subtree is scanned."""
+    refs: List[ast.expr] = []
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = dotted_chain(node.func)
+            if chain and chain[-1] in TRACING_COMBINATORS:
+                # jax.vmap(f)(...) / lax.scan(f, ...): f is traced
+                for arg in node.args[:2]:
+                    refs.append(arg)
+                continue
+            if isinstance(node.func, ast.Call):
+                # (vmap(f))(args) — inner call already visited above
+                continue
+            refs.append(node.func)
+    return refs
+
+
+def traced_reachable(project: Project, idx: DefIndex
+                     ) -> List[Tuple[DefSite, str]]:
+    """Every definition reachable from any jit/pallas entry point, paired
+    with a human-readable provenance string for messages. Deduplicated by
+    (file, lineno)."""
+    seen: Set[Tuple[str, int]] = set()
+    out: List[Tuple[DefSite, str]] = []
+    work: List[Tuple[DefSite, str]] = []
+
+    def cls_of(file: ParsedFile, ref_line: int) -> Optional[str]:
+        # enclosing class of the line the jit call appears on (so
+        # ``self._impl`` references resolve against the right class)
+        best = None
+        for node in ast.walk(file.tree):
+            if isinstance(node, ast.ClassDef):
+                end = getattr(node, "end_lineno", node.lineno)
+                if node.lineno <= ref_line <= end:
+                    best = node.name
+        return best
+
+    for file in project.files.values():
+        for ref, line in entry_points(file):
+            cls = cls_of(file, line)
+            for site in resolve_ref(ref, file, cls, idx):
+                work.append((site, f"jit entry {file.rel}:{line}"))
+
+    while work:
+        site, origin = work.pop()
+        key = (site.file.rel, site.node.lineno)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append((site, origin))
+        for ref in called_refs(site.node):
+            for callee in resolve_ref(ref, site.file, site.cls, idx):
+                work.append(
+                    (callee, f"{origin} -> {site.file.rel}:{site.name}"))
+    return out

@@ -1,0 +1,229 @@
+"""Rules ``metric-catalog`` and ``bench-keys`` — artifact/code consistency.
+
+**metric-catalog.** The metric names the code emits and the catalog in
+``docs/observability.md`` must match in *both* directions. Code-side
+names come from ``.counter/.gauge/.histogram("name", ...)`` calls on a
+metrics registry (receiver named ``m`` / ``registry`` / ``*.metrics`` —
+the trace recorder's unrelated ``tr.counter(...)`` channel is excluded);
+f-string names like ``f"sched_shed_{reason}_total"`` become wildcard
+patterns. Doc-side names are the backticked first cell of catalog table
+rows, where ``sched_shed_<reason>_total`` is the same wildcard. A code
+name with no doc row is an undocumented metric; a doc row matching no
+code site is catalog rot.
+
+**bench-keys.** Every rule key in ``scripts/bench_baselines.json`` must
+resolve to a real (numeric) path in the committed ``BENCH_serve.json``
+snapshot, and every rule must carry at least one known constraint field
+— a typo'd field name (``expectt``) or a rule with no constraints is a
+gate that never gates.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import os
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.base import Project, Violation, dotted_chain
+
+RULE_CATALOG = "metric-catalog"
+RULE_BENCH = "bench-keys"
+
+METRIC_FACTORIES = {"counter", "gauge", "histogram"}
+# receiver spellings that denote the obs metrics registry
+_REGISTRY_BASES = {"m", "registry", "metrics", "reg"}
+
+_BACKTICK_RE = re.compile(r"`([A-Za-z0-9_<>{}*]+)`")
+_WILD_RE = re.compile(r"<[^<>]+>|\{[^{}]+\}")
+
+
+def _normalize(name: str) -> str:
+    """``sched_shed_<reason>_total`` / ``..._{reason}_...`` -> ``*``."""
+    return _WILD_RE.sub("*", name)
+
+
+def _pattern_matches(pattern: str, name: str) -> bool:
+    if "*" not in pattern:
+        return pattern == name
+    return re.fullmatch(
+        "[A-Za-z0-9_]+".join(re.escape(p) for p in pattern.split("*")),
+        name) is not None
+
+
+def _is_registry_recv(func: ast.expr) -> bool:
+    chain = dotted_chain(func)
+    if not chain or len(chain) < 2 or chain[-1] not in METRIC_FACTORIES:
+        return False
+    recv = chain[:-1]
+    return recv[-1] in _REGISTRY_BASES or "metrics" in recv
+
+
+def _name_arg(call: ast.Call) -> Optional[str]:
+    """First argument as a (possibly wildcard) metric name."""
+    if not call.args:
+        return None
+    arg = call.args[0]
+    if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+        return arg.value
+    if isinstance(arg, ast.JoinedStr):
+        parts = []
+        for piece in arg.values:
+            if isinstance(piece, ast.Constant):
+                parts.append(str(piece.value))
+            else:
+                parts.append("*")
+        return "".join(parts)
+    return None   # dynamic name built elsewhere — out of static reach
+
+
+def _code_metrics(project: Project, scope
+                  ) -> List[Tuple[str, str, int]]:
+    """(name-or-pattern, file rel, line) for every registry call."""
+    out = []
+    for f in project.under(tuple(scope)):
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.Call) and _is_registry_recv(node.func):
+                name = _name_arg(node)
+                if name is not None:
+                    out.append((_normalize(name), f.rel, node.lineno))
+    return out
+
+
+def _doc_metrics(doc_text: str) -> Dict[str, int]:
+    """Catalog entries -> first line seen. Table rows contribute every
+    backticked token in their first cell (rows like ``| `a` / `b` | …``
+    document two metrics); wildcard tokens anywhere in the doc count,
+    so a pattern explained in prose still pairs with its code site."""
+    entries: Dict[str, int] = {}
+    for i, line in enumerate(doc_text.splitlines(), start=1):
+        stripped = line.strip()
+        if stripped.startswith("|"):
+            cells = [c.strip() for c in stripped.strip("|").split("|")]
+            if cells and not set(cells[0]) <= {"-", ":", " "}:
+                for tok in _BACKTICK_RE.findall(cells[0]):
+                    entries.setdefault(_normalize(tok), i)
+        for tok in _BACKTICK_RE.findall(stripped):
+            if "<" in tok or "{" in tok:
+                entries.setdefault(_normalize(tok), i)
+    return entries
+
+
+def check_metric_catalog(project: Project, scope, doc_rel: str
+                         ) -> List[Violation]:
+    doc_path = os.path.join(project.root, doc_rel)
+    try:
+        with open(doc_path, "r", encoding="utf-8") as fh:
+            doc_text = fh.read()
+    except OSError as exc:
+        return [Violation(doc_rel, 1, RULE_CATALOG,
+                          f"metric catalog unreadable: {exc}")]
+    docs = _doc_metrics(doc_text)
+    code = _code_metrics(project, scope)
+    out: List[Violation] = []
+
+    for name, rel, line in code:
+        # documented when: exact row, a doc pattern covering this name, or
+        # (for an f-string emission site) a documented concrete instance
+        if not any(d == name or _pattern_matches(d, name)
+                   or _pattern_matches(name, d) for d in docs):
+            out.append(Violation(
+                rel, line, RULE_CATALOG,
+                f"metric `{name}` is emitted here but has no row in "
+                f"{doc_rel}'s catalog; undocumented metrics rot first"))
+
+    code_names = {n for n, _, _ in code}
+    for doc_name, line in sorted(docs.items()):
+        # a doc pattern is satisfied by any code name it matches, and a
+        # doc literal by any code pattern matching it
+        if doc_name in code_names:
+            continue
+        if any(_pattern_matches(doc_name, c) or _pattern_matches(c, doc_name)
+               for c in code_names):
+            continue
+        out.append(Violation(
+            doc_rel, line, RULE_CATALOG,
+            f"catalog row `{doc_name}` matches no metric emitted in "
+            f"{'/'.join(scope)}; stale rows make the catalog untrustworthy"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# bench-keys
+
+_BENCH_FIELDS = {"expect", "abs", "rel", "min", "max", "why"}
+_CONSTRAINTS = {"expect", "min", "max"}
+
+
+def _lookup(data, dotted: str):
+    cur = data
+    for seg in dotted.split("."):
+        if isinstance(cur, list):
+            try:
+                cur = cur[int(seg)]
+            except (ValueError, IndexError):
+                return None
+        elif isinstance(cur, dict):
+            if seg not in cur:
+                return None
+            cur = cur[seg]
+        else:
+            return None
+    return cur
+
+
+def _key_line(text: str, key: str) -> int:
+    needle = f'"{key}"'
+    for i, line in enumerate(text.splitlines(), start=1):
+        if needle in line:
+            return i
+    return 1
+
+
+def check_bench_keys(project: Project, baselines_rel: str,
+                     results_rel: str) -> List[Violation]:
+    base_path = os.path.join(project.root, baselines_rel)
+    res_path = os.path.join(project.root, results_rel)
+    try:
+        with open(base_path, "r", encoding="utf-8") as fh:
+            base_text = fh.read()
+        baselines = json.loads(base_text)
+    except (OSError, json.JSONDecodeError) as exc:
+        return [Violation(baselines_rel, 1, RULE_BENCH,
+                          f"bench baselines unreadable: {exc}")]
+    try:
+        with open(res_path, "r", encoding="utf-8") as fh:
+            results = json.load(fh)
+    except (OSError, json.JSONDecodeError) as exc:
+        return [Violation(results_rel, 1, RULE_BENCH,
+                          f"bench results unreadable: {exc}")]
+
+    out: List[Violation] = []
+    for key, rule in sorted(baselines.get("rules", {}).items()):
+        line = _key_line(base_text, key)
+        val = _lookup(results, key)
+        if val is None:
+            out.append(Violation(
+                baselines_rel, line, RULE_BENCH,
+                f"baseline rule key `{key}` resolves to no path in "
+                f"{results_rel}; a stale gate never gates"))
+            continue
+        if not isinstance(val, (int, float)) or isinstance(val, bool):
+            out.append(Violation(
+                baselines_rel, line, RULE_BENCH,
+                f"baseline rule key `{key}` resolves to a non-numeric "
+                f"value ({type(val).__name__}); the gate cannot compare "
+                f"it"))
+        unknown = sorted(set(rule) - _BENCH_FIELDS)
+        if unknown:
+            out.append(Violation(
+                baselines_rel, line, RULE_BENCH,
+                f"baseline rule `{key}` has unknown field(s) "
+                f"{', '.join(unknown)}; typo'd constraints are silently "
+                f"ignored by check_bench"))
+        if not set(rule) & _CONSTRAINTS:
+            out.append(Violation(
+                baselines_rel, line, RULE_BENCH,
+                f"baseline rule `{key}` carries no expect/min/max "
+                f"constraint; a vacuous rule always passes"))
+    return out

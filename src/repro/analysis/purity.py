@@ -1,0 +1,130 @@
+"""Rule ``jit-purity`` — no host-side effects inside traced code — and
+rule ``wallclock`` — no epoch wall-clock reads in determinism-scoped
+modules.
+
+**jit-purity (the no-Heisenberg invariant).** The whole observability
+layer rests on one line in the obs design notes: instruments are *never*
+inside jitted code, which is what makes metrics-on == metrics-off bitwise
+token parity testable at all. The same goes for ``print``, wall-clock
+reads, Python/numpy RNG, journal writes, file I/O, and module-global
+mutation: any of them inside a function traced by ``jax.jit`` or compiled
+by ``pl.pallas_call`` either fires once at trace time (a silent no-op on
+every later call — a lurking bug) or forces a host sync (a Heisenberg
+probe that changes dispatch behavior when observability is toggled).
+This rule walks the call graph reachable from every jit/pallas entry
+point (``ServeEngine``'s jitted impls, ``model.mixed_step``, the Pallas
+kernels, jitted test helpers) and flags each effect site.
+
+**wallclock.** ``time.time()`` in ``src/repro/obs/`` or
+``src/repro/serve/`` stamps epoch wall-clock into exported artifacts
+(metrics JSONL, journals), making byte-identical export runs impossible
+under test. Relative timers (``time.perf_counter``) are fine — the SLO
+tracker's wall series is deliberate and never compared bitwise — but
+epoch stamps must come through an injectable clock
+(``MetricsRegistry(clock=...)``) so tests can pin them.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.base import ParsedFile, Project, Violation, dotted_chain
+from repro.analysis.callgraph import build_index, traced_reachable
+
+RULE_PURITY = "jit-purity"
+RULE_WALLCLOCK = "wallclock"
+
+# time.<attr> calls that read host clocks
+CLOCK_ATTRS = {"time", "perf_counter", "monotonic", "process_time", "sleep"}
+# metric-instrument mutators (``set`` needs receiver evidence: it
+# collides with jnp's functional ``x.at[i].set(v)`` update)
+METRIC_MUTATORS = {"inc", "observe", "set_max"}
+TRACER_METHODS = {"instant", "span"}
+
+
+def _has_stdlib_random(file: ParsedFile) -> bool:
+    """True when ``import random`` (the stdlib module) is in scope —
+    distinguishes ``random.split`` on ``jax.random`` aliases from the
+    stdlib's global-state RNG."""
+    for node in ast.walk(file.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "random" and alias.asname is None:
+                    return True
+    return False
+
+
+def _effects(file: ParsedFile, fn: ast.AST, origin: str
+             ) -> List[Violation]:
+    out: List[Violation] = []
+    stdlib_random = _has_stdlib_random(file)
+
+    def flag(node: ast.AST, what: str) -> None:
+        out.append(Violation(
+            file.rel, node.lineno, RULE_PURITY,
+            f"{what} inside traced code (reached via {origin}); host "
+            f"effects inside jit/pallas run at trace time only and can "
+            f"force host syncs"))
+
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Global):
+                flag(node, "module-global mutation (`global` statement)")
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            chain = dotted_chain(node.func)
+            if chain is None:
+                # x.at[i].set(v) and friends flatten to None — safe
+                continue
+            name = chain[-1]
+            if chain == ["print"]:
+                flag(node, "print() call")
+            elif chain == ["open"]:
+                flag(node, "file I/O (open())")
+            elif len(chain) == 2 and chain[0] == "time" \
+                    and name in CLOCK_ATTRS:
+                flag(node, f"host clock read (time.{name}())")
+            elif len(chain) >= 2 and chain[0] == "random" and stdlib_random:
+                flag(node, f"stdlib random.{name}() (global-state RNG)")
+            elif len(chain) >= 3 and chain[0] in {"np", "numpy"} \
+                    and chain[1] == "random":
+                flag(node, f"numpy host RNG (np.random.{name})")
+            elif name in METRIC_MUTATORS and len(chain) >= 2:
+                flag(node, f"metric instrument call (.{name}())")
+            elif name == "set" and len(chain) >= 2 and (
+                    "metrics" in chain[:-1]
+                    or chain[-2].startswith("_m")):
+                flag(node, "metric gauge call (.set())")
+            elif name in TRACER_METHODS and len(chain) >= 2 and (
+                    "tracer" in chain[:-1] or chain[-2] in {"tr", "tracer"}):
+                flag(node, f"trace recorder call (.{name}())")
+            elif "journal" in chain[:-1]:
+                flag(node, f"journal write (.{name}())")
+    return out
+
+
+def check_jit_purity(project: Project) -> List[Violation]:
+    idx = build_index(project)
+    out: List[Violation] = []
+    for site, origin in traced_reachable(project, idx):
+        out.extend(_effects(site.file, site.node, origin))
+    return sorted(set(out))
+
+
+def check_wallclock(project: Project, scope) -> List[Violation]:
+    out: List[Violation] = []
+    for file in project.under(tuple(scope)):
+        for node in ast.walk(file.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = dotted_chain(node.func)
+            if chain == ["time", "time"]:
+                out.append(Violation(
+                    file.rel, node.lineno, RULE_WALLCLOCK,
+                    "epoch wall-clock time.time() in a determinism-scoped "
+                    "module; route it through an injectable clock (see "
+                    "MetricsRegistry(clock=...)) so exports are "
+                    "deterministic under test"))
+    return out

@@ -1,0 +1,153 @@
+"""Rule ``rng-discipline`` — counter-based key streams only in the
+serving path.
+
+The preempt-and-recompute exactness argument (serving.md, sampling.py)
+is that every sample's token ``j`` is drawn under
+
+    fold_in(fold_in(PRNGKey(seed), sample_idx), j)
+
+— a pure function of request constants. Nothing about the stream may
+depend on batch composition, slot assignment, or how many times the
+request was evicted. Two things break that and are flagged anywhere
+under ``src/repro/serve/``:
+
+  * ``jax.random.split`` — splitting advances a *stateful position* in
+    key space: replaying a preempted request would re-split from a
+    different point and every downstream draw changes. (``split`` stays
+    perfectly legal in ``models/`` / ``core/`` init paths, which run once
+    and never replay — the rule's scope is the serve tree only.)
+  * a draw (``categorical``, ``uniform``, …) whose key operand is not
+    derived from a ``fold_in`` chain — e.g. a raw ``PRNGKey(seed)``
+    passed straight in, or a key variable reused across draws. Key
+    derivation is traced through simple assignments and through calls to
+    same-module/project helpers whose bodies contain ``fold_in`` (the
+    ``step_keys`` pattern).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.base import ParsedFile, Project, Violation, dotted_chain
+from repro.analysis.callgraph import DefIndex, build_index
+
+RULE = "rng-discipline"
+
+DRAW_FNS = {"categorical", "uniform", "normal", "bernoulli", "gumbel",
+            "choice", "randint", "permutation", "truncated_normal",
+            "exponential", "beta", "dirichlet", "gamma", "laplace",
+            "logistic", "poisson", "rademacher", "bits"}
+
+
+def _is_random_attr(chain, name: str) -> bool:
+    """``jax.random.<name>`` / ``random.<name>`` / ``jrandom.<name>``."""
+    return (chain is not None and chain[-1] == name
+            and len(chain) >= 2
+            and chain[-2] in {"random", "jrandom", "jrand"})
+
+
+def _contains_fold_in(node: ast.AST) -> bool:
+    """A ``fold_in`` call *or reference* anywhere in the subtree —
+    references matter because the repo's batched derivation is
+    ``jax.vmap(jax.random.fold_in)(base_keys, steps)``."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr == "fold_in":
+            return True
+        if isinstance(sub, ast.Name) and sub.id == "fold_in":
+            return True
+    return False
+
+
+def _fn_body_has_fold_in(name: str, file: ParsedFile,
+                         idx: DefIndex) -> bool:
+    site = idx.module_scope.get((file.rel, name))
+    candidates = [site] if site else idx.by_name.get(name, [])
+    return any(c and _contains_fold_in(c.node) for c in candidates)
+
+
+class _DrawChecker(ast.NodeVisitor):
+    """Per-function-scope walk: tracks which local names are fold_in
+    derived, then validates every draw call's key operand."""
+
+    def __init__(self, file: ParsedFile, idx: DefIndex):
+        self.file = file
+        self.idx = idx
+        self.derived: Set[str] = set()
+        self.out: List[Violation] = []
+
+    def _expr_derived(self, node: ast.expr) -> bool:
+        if _contains_fold_in(node):
+            return True
+        if isinstance(node, ast.Name):
+            return node.id in self.derived
+        if isinstance(node, ast.Call):
+            chain = dotted_chain(node.func)
+            if chain and len(chain) == 1 and _fn_body_has_fold_in(
+                    chain[0], self.file, self.idx):
+                return True
+            # vmap(fold_in)-style wrappers: any argument already derived
+            return any(self._expr_derived(a) for a in node.args)
+        if isinstance(node, ast.Subscript):
+            return self._expr_derived(node.value)
+        return False
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if self._expr_derived(node.value):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    self.derived.add(tgt.id)
+                elif isinstance(tgt, ast.Tuple):
+                    for elt in tgt.elts:
+                        if isinstance(elt, ast.Name):
+                            self.derived.add(elt.id)
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        chain = dotted_chain(node.func)
+        # split is illegal in the serve tree, full stop
+        if _is_random_attr(chain, "split"):
+            self.out.append(Violation(
+                self.file.rel, node.lineno, RULE,
+                "jax.random.split in the serve path: splitting is "
+                "positional, not counter-based — preempt-and-recompute "
+                "replay would re-derive different keys. Use "
+                "fold_in(fold_in(PRNGKey(seed), sample_idx), token_idx)"))
+        # draws must take a fold_in-derived key
+        draw = None
+        if chain and chain[-1] in DRAW_FNS and _is_random_attr(
+                chain, chain[-1]):
+            draw, key_arg = chain[-1], (node.args[0] if node.args else None)
+        elif isinstance(node.func, ast.Call):
+            # jax.vmap(jax.random.categorical)(keys, logits)
+            inner = node.func
+            for arg in inner.args:
+                achain = dotted_chain(arg)
+                if achain and achain[-1] in DRAW_FNS \
+                        and _is_random_attr(achain, achain[-1]):
+                    draw = achain[-1]
+                    key_arg = node.args[0] if node.args else None
+                    break
+        if draw is not None and key_arg is not None \
+                and not self._expr_derived(key_arg):
+            self.out.append(Violation(
+                self.file.rel, node.lineno, RULE,
+                f"jax.random.{draw} key is not derived from a fold_in "
+                f"counter chain; raw/reused keys break bitwise replay "
+                f"under preemption and restore"))
+        self.generic_visit(node)
+
+
+def check_rng_discipline(project: Project, scope) -> List[Violation]:
+    idx = build_index(project)
+    out: List[Violation] = []
+    for file in project.under(tuple(scope)):
+        for node in ast.walk(file.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                checker = _DrawChecker(file, idx)
+                body = node.body if isinstance(node.body, list) \
+                    else [node.body]
+                for stmt in body:
+                    checker.visit(stmt)
+                out.extend(checker.out)
+    return out

@@ -1,0 +1,177 @@
+"""Rule registry, file discovery, pragma filtering, and baseline logic.
+
+The flow mirrors every serious lint driver:
+
+  1. discover ``.py`` files under the configured roots (fixture corpora
+     excluded), parse them once into a :class:`Project`;
+  2. run each enabled rule, collecting raw :class:`Violation`\\ s;
+  3. drop findings suppressed by an inline
+     ``# repro-lint: allow[rule] reason`` pragma (the reason is
+     mandatory);
+  4. split the rest against the committed allowlist baseline: baselined
+     fingerprints are reported separately and do not fail the run, new
+     findings do. In ``--strict`` mode a baseline entry matching nothing
+     is *itself* a failure — fixed debt must leave the allowlist in the
+     same diff, or the baseline quietly grows teeth-marks.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.base import ParsedFile, Project, Violation
+from repro.analysis.catalog import check_bench_keys, check_metric_catalog
+from repro.analysis.enums import check_enum_append
+from repro.analysis.lifecycle import check_state_exhaustive
+from repro.analysis.purity import check_jit_purity, check_wallclock
+from repro.analysis.rng import check_rng_discipline
+from repro.analysis.traced_flow import check_tracer_flow
+
+ALL_RULES = ("jit-purity", "rng-discipline", "tracer-flow",
+             "state-exhaustive", "enum-append", "metric-catalog",
+             "bench-keys", "wallclock")
+
+
+@dataclass
+class LintConfig:
+    root: str
+    paths: Tuple[str, ...] = ("src/repro", "scripts", "tests")
+    exclude: Tuple[str, ...] = ("tests/fixtures/lint",)
+    rules: Tuple[str, ...] = ALL_RULES
+    # per-rule scopes (repo-relative)
+    rng_scope: Tuple[str, ...] = ("src/repro/serve",)
+    wallclock_scope: Tuple[str, ...] = ("src/repro/obs", "src/repro/serve")
+    lifecycle_files: Tuple[str, ...] = ("src/repro/serve/scheduler.py",
+                                        "src/repro/serve/recovery.py")
+    state_module: str = "src/repro/serve/scheduler.py"
+    metric_scope: Tuple[str, ...] = ("src/repro",)
+    metrics_doc: str = "docs/observability.md"
+    bench_baselines: str = "scripts/bench_baselines.json"
+    bench_results: str = "BENCH_serve.json"
+    enum_manifest: str = "src/repro/analysis/enum_manifest.json"
+
+
+@dataclass
+class LintResult:
+    violations: List[Violation] = field(default_factory=list)   # failing
+    suppressed: List[Tuple[Violation, str]] = field(default_factory=list)
+    baselined: List[Violation] = field(default_factory=list)
+    stale_baseline: List[str] = field(default_factory=list)
+    parse_errors: List[Violation] = field(default_factory=list)
+
+    def failed(self, strict: bool) -> bool:
+        if self.violations or self.parse_errors:
+            return True
+        return strict and bool(self.stale_baseline)
+
+
+def _discover(cfg: LintConfig) -> Project:
+    project = Project(root=cfg.root)
+    errors: List[Violation] = []
+    for prefix in cfg.paths:
+        top = os.path.join(cfg.root, prefix)
+        if os.path.isfile(top) and top.endswith(".py"):
+            candidates = [top]
+        else:
+            candidates = []
+            for dirpath, dirnames, filenames in os.walk(top):
+                dirnames[:] = sorted(
+                    d for d in dirnames
+                    if d not in {"__pycache__", ".git", ".pytest_cache"})
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        candidates.append(os.path.join(dirpath, fn))
+        for path in candidates:
+            rel = os.path.relpath(path, cfg.root).replace(os.sep, "/")
+            if any(rel == e or rel.startswith(e.rstrip("/") + "/")
+                   for e in cfg.exclude):
+                continue
+            with open(path, "r", encoding="utf-8") as fh:
+                source = fh.read()
+            try:
+                tree = ast.parse(source, filename=rel)
+            except SyntaxError as exc:
+                errors.append(Violation(
+                    rel, exc.lineno or 1, "parse",
+                    f"syntax error: {exc.msg}"))
+                continue
+            project.files[rel] = ParsedFile(rel, source, tree)
+    project.parse_errors = errors   # type: ignore[attr-defined]
+    return project
+
+
+def _run_rules(project: Project, cfg: LintConfig) -> List[Violation]:
+    out: List[Violation] = []
+    if "jit-purity" in cfg.rules:
+        out.extend(check_jit_purity(project))
+    if "rng-discipline" in cfg.rules:
+        out.extend(check_rng_discipline(project, cfg.rng_scope))
+    if "tracer-flow" in cfg.rules:
+        out.extend(check_tracer_flow(project))
+    if "state-exhaustive" in cfg.rules:
+        out.extend(check_state_exhaustive(
+            project, cfg.lifecycle_files, cfg.state_module))
+    if "enum-append" in cfg.rules:
+        out.extend(check_enum_append(project, cfg.enum_manifest))
+    if "metric-catalog" in cfg.rules:
+        out.extend(check_metric_catalog(
+            project, cfg.metric_scope, cfg.metrics_doc))
+    if "bench-keys" in cfg.rules:
+        out.extend(check_bench_keys(
+            project, cfg.bench_baselines, cfg.bench_results))
+    if "wallclock" in cfg.rules:
+        out.extend(check_wallclock(project, cfg.wallclock_scope))
+    return sorted(set(out))
+
+
+def load_baseline(path: str) -> List[str]:
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            data = json.load(fh)
+    except OSError:
+        return []
+    return list(data.get("allow", []))
+
+
+def write_baseline(path: str, violations: List[Violation]) -> None:
+    data = {
+        "_comment": "repro-lint allowlist: line-number-free fingerprints "
+                    "of accepted findings. Regenerate with "
+                    "scripts/lint_repro.py --write-baseline; strict mode "
+                    "fails on entries that no longer match anything.",
+        "allow": sorted({v.fingerprint for v in violations}),
+    }
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(data, fh, indent=2)
+        fh.write("\n")
+
+
+def run_lint(cfg: LintConfig, baseline: Optional[List[str]] = None
+             ) -> LintResult:
+    project = _discover(cfg)
+    result = LintResult()
+    result.parse_errors = getattr(project, "parse_errors", [])
+    raw = _run_rules(project, cfg)
+
+    unsuppressed: List[Violation] = []
+    for v in raw:
+        f = project.get(v.path)
+        pragma = f.pragma_for(v.line, v.rule) if f is not None else None
+        if pragma is not None:
+            result.suppressed.append((v, pragma.reason))
+        else:
+            unsuppressed.append(v)
+
+    allow = set(baseline or [])
+    matched: set = set()
+    for v in unsuppressed:
+        if v.fingerprint in allow:
+            result.baselined.append(v)
+            matched.add(v.fingerprint)
+        else:
+            result.violations.append(v)
+    result.stale_baseline = sorted(allow - matched)
+    return result

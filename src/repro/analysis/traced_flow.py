@@ -1,0 +1,211 @@
+"""Rule ``tracer-flow`` — no Python control flow on traced values.
+
+Inside a jitted function, parameters are abstract tracers: ``if x > 0``
+does not branch on the runtime value, it either raises a
+ConcretizationTypeError or (worse, via accidental ``bool`` coercion on a
+concrete-at-trace-time value) bakes one branch into the compiled
+artifact forever. The fix is always ``lax.cond`` / ``jnp.where`` /
+``lax.while_loop``. This rule taints the positional parameters of every
+traced-reachable function and flags ``if`` / ``while`` / ``assert``
+whose test arithmetic depends on a tainted name.
+
+What stays *un*-flagged, because it is genuinely static under tracing:
+
+  * keyword-only parameters — the repo's jit wrappers bind them via
+    ``functools.partial(..., stochastic=True)``, making them Python
+    constants at trace time;
+  * ``x.shape`` / ``.ndim`` / ``.dtype`` / ``.size``, ``len(x)``,
+    ``isinstance``/``type``/``hasattr``/``getattr`` — all static
+    metadata;
+  * identity tests (``x is None`` / ``is not None``) — pytree structure,
+    not values;
+  * bare-name truthiness (``if extra:``) — container emptiness, a static
+    pytree property.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis.base import Project, Violation, dotted_chain
+from repro.analysis.callgraph import (BUILTINS, FuncNode, build_index,
+                                      traced_reachable)
+
+RULE = "tracer-flow"
+
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+STATIC_CALLS = {"len", "isinstance", "getattr", "hasattr", "type", "range",
+                "enumerate", "zip", "bool", "int", "float", "str", "ndim"}
+# annotations that mark a positional parameter as host-side config, not a
+# device array (`chunk: int = 64`, `method: str`)
+STATIC_ANNOTATIONS = {"int", "str", "bool", "float"}
+# positional parameters that are static Python config by repo convention:
+# dataclass configs, placement plans, mesh/layout descriptors, method
+# selectors — never device arrays
+STATIC_PARAM_NAMES = {"cfg", "config", "plan", "spec", "specs", "mesh",
+                      "layout", "arch", "opt", "opts", "method", "shape",
+                      "dtype", "axis", "axes", "mode", "kind", "name"}
+
+
+def _tainted_params(fn: FuncNode) -> Set[str]:
+    args = fn.args
+    names: Set[str] = set()
+    for a in args.args + args.posonlyargs:
+        ann = getattr(a, "annotation", None)
+        chain = dotted_chain(ann) if ann is not None else None
+        if chain and chain[-1] in STATIC_ANNOTATIONS:
+            continue   # annotated as a host scalar/string — static config
+        names.add(a.arg)
+    names.discard("self")
+    names.discard("cls")
+    # kw-only params are partial-bound Python constants in this codebase;
+    # config-convention names are static dataclasses, not arrays
+    return names - STATIC_PARAM_NAMES
+
+
+def _taint_target(tgt: ast.expr, tainted: Set[str]) -> None:
+    if isinstance(tgt, ast.Name):
+        tainted.add(tgt.id)
+    elif isinstance(tgt, (ast.Tuple, ast.List)):
+        for elt in tgt.elts:
+            _taint_target(elt, tainted)
+
+
+def _static_const_container(node: ast.expr) -> bool:
+    """A string literal, or a tuple/list/set of string literals —
+    comparing anything against these is string dispatch, never tracer
+    arithmetic."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return True
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        return all(isinstance(e, ast.Constant) and isinstance(e.value, str)
+                   for e in node.elts)
+    return False
+
+
+def _value_taints(expr: ast.AST, tainted: Set[str]) -> bool:
+    """True when ``expr``'s *value arithmetic* touches a tainted name,
+    with static subtrees pruned: ``.shape``-style metadata, attribute
+    field reads (``cfg.use_moe`` — field access on a traced array in a
+    Python test position is essentially always config access), string
+    dispatch, identity tests, and static builtins."""
+
+    def scan(node: ast.AST) -> bool:
+        if isinstance(node, ast.Attribute):
+            if node.attr in STATIC_ATTRS:
+                return False
+            if dotted_chain(node) is not None:
+                return False   # pure field-access chain — config read
+            return any(scan(c) for c in ast.iter_child_nodes(node))
+        if isinstance(node, ast.Call):
+            chain = dotted_chain(node.func)
+            if chain and chain[-1] in STATIC_CALLS:
+                return False
+            if chain and len(chain) == 1 and chain[0] not in BUILTINS:
+                # project helper: its own body gets its own reachability
+                # pass, and helpers used in Python tests return host
+                # bools/ints here by construction
+                return False
+            # library calls: result could be traced iff an argument is
+            return any(scan(a) for a in node.args)
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False
+            if all(_static_const_container(c) for c in node.comparators):
+                return False   # string dispatch (method == "aot", ...)
+            if all(isinstance(op, (ast.In, ast.NotIn)) for op in node.ops) \
+                    and isinstance(node.left, ast.Constant) \
+                    and isinstance(node.left.value, str):
+                return False   # `"mlp" in params`: key membership, static
+            return scan(node.left) or any(scan(c) for c in node.comparators)
+        if isinstance(node, ast.BoolOp):
+            # bare names / `not name` inside and/or are container
+            # truthiness (static pytree emptiness), same as a bare test
+            return any(scan(v) for v in node.values
+                       if not isinstance(v, ast.Name)
+                       and not (isinstance(v, ast.UnaryOp)
+                                and isinstance(v.op, ast.Not)
+                                and isinstance(v.operand, ast.Name)))
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.Not) \
+                and isinstance(node.operand, ast.Name):
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in tainted
+        return any(scan(c) for c in ast.iter_child_nodes(node))
+
+    return scan(expr)
+
+
+def _test_uses_taint(test: ast.expr, tainted: Set[str]) -> bool:
+    # bare name / `not name`: container truthiness, static pytree shape
+    if isinstance(test, ast.Name):
+        return False
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not) \
+            and isinstance(test.operand, ast.Name):
+        return False
+    return _value_taints(test, tainted)
+
+
+def _check_fn(site, origin: str) -> List[Violation]:
+    fn = site.node
+    tainted = set(_tainted_params(fn))
+    out: List[Violation] = []
+
+    def walk(stmts) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue   # nested defs get their own reachability pass
+            # straight-line taint propagation, in body order (the same
+            # pruned scan as tests, so `n = x.shape[1]` stays static)
+            if isinstance(stmt, ast.Assign):
+                if _value_taints(stmt.value, tainted):
+                    for tgt in stmt.targets:
+                        _taint_target(tgt, tainted)
+            elif isinstance(stmt, ast.AugAssign):
+                if isinstance(stmt.target, ast.Name) and \
+                        _value_taints(stmt.value, tainted):
+                    tainted.add(stmt.target.id)
+            elif isinstance(stmt, ast.AnnAssign):
+                if stmt.value is not None and \
+                        _value_taints(stmt.value, tainted):
+                    _taint_target(stmt.target, tainted)
+            elif isinstance(stmt, ast.For):
+                if _value_taints(stmt.iter, tainted):
+                    _taint_target(stmt.target, tainted)
+            # the checks themselves
+            kind = None
+            test = None
+            if isinstance(stmt, ast.If):
+                kind, test = "if", stmt.test
+            elif isinstance(stmt, ast.While):
+                kind, test = "while", stmt.test
+            elif isinstance(stmt, ast.Assert):
+                kind, test = "assert", stmt.test
+            if test is not None and _test_uses_taint(test, tainted):
+                out.append(Violation(
+                    site.file.rel, stmt.lineno, RULE,
+                    f"Python `{kind}` on a value derived from traced "
+                    f"parameters (reached via {origin}); under jit this "
+                    f"is a trace-time constant or a ConcretizationTypeError"
+                    f" — use lax.cond / jnp.where / lax.while_loop"))
+            # recurse into every nested statement list
+            for fld in ("body", "orelse", "finalbody"):
+                sub = getattr(stmt, fld, None)
+                if isinstance(sub, list) and sub \
+                        and isinstance(sub[0], ast.stmt):
+                    walk(sub)
+            for handler in getattr(stmt, "handlers", []) or []:
+                walk(handler.body)
+
+    body = fn.body if isinstance(fn.body, list) else []
+    walk(body)
+    return out
+
+
+def check_tracer_flow(project: Project) -> List[Violation]:
+    idx = build_index(project)
+    out: List[Violation] = []
+    for site, origin in traced_reachable(project, idx):
+        out.extend(_check_fn(site, origin))
+    return sorted(set(out))

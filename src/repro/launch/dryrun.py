@@ -187,6 +187,8 @@ def _compile_one(arch, shape_name, *, multi_pod, verbose_tag=None, **kw):
     compiled = lowered.compile()
     t_compile = time.time() - t0
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older jax: one dict per device
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     coll = collective_bytes_from_hlo(compiled.as_text())
     out = {
@@ -277,8 +279,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
               f"lower={full['lower_s']:.1f}s compile={full['compile_s']:.1f}s")
         print(f"   memory/device: args={m['argument_bytes']/1e9:.3f}GB "
               f"temp={m['temp_bytes']/1e9:.3f}GB out={m['output_bytes']/1e9:.3f}GB")
+        coll_s = ", ".join(f"{k}:{int(v['count'])}"
+                           for k, v in coll.items())
         print(f"   flops/device={flops:.3e} bytes/device={bytes_:.3e} "
-              f"collectives={{{', '.join(f'{k}:{int(v['count'])}' for k, v in coll.items())}}}")
+              f"collectives={{{coll_s}}}")
     if out_dir:
         _write(out_dir, arch, shape_name, multi_pod, result)
     return result

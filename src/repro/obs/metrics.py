@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import json
 import time
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 
 class Counter:
@@ -160,10 +160,16 @@ class MetricsRegistry:
     ``counter/gauge/histogram`` return the existing instrument when the
     name is already registered (so a pool and a scheduler can share one
     registry without coordination), and null instruments when the
-    registry is disabled."""
+    registry is disabled.
 
-    def __init__(self, enabled: bool = True):
+    ``clock`` stamps JSONL export lines. It defaults to epoch wall time;
+    tests inject a fixed callable so two runs of the same workload export
+    byte-identical files (the only wall-clock read in the registry)."""
+
+    def __init__(self, enabled: bool = True,
+                 clock: Callable[[], float] = time.time):
         self.enabled = enabled
+        self.clock = clock
         self._metrics: Dict[str, Union[Counter, Gauge, Histogram]] = {}
 
     def _get(self, name: str, kind: type):
@@ -243,7 +249,7 @@ class MetricsRegistry:
 
     def write_jsonl(self, path: str, extra: Optional[dict] = None) -> None:
         """Append one snapshot line (wall timestamp + metrics + extras)."""
-        rec = {"ts": time.time(), "metrics": self.snapshot()}
+        rec = {"ts": self.clock(), "metrics": self.snapshot()}
         if extra:
             rec.update(extra)
         with open(path, "a") as f:

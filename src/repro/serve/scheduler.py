@@ -84,6 +84,13 @@ ABORTED, SHED = "aborted", "shed"
 # retries the tick — see ContinuousScheduler.quarantine
 QUARANTINED = "quarantined"
 
+# Every state a request can end in. Append-only (pinned by the repro-lint
+# enum manifest): dispatch sites keyed on terminal state must either use
+# this tuple or enumerate every member (rule state-exhaustive), so adding
+# a fifth terminal state — beam-search pruning is ROADMAP item 2 — turns
+# each missed site into a lint error instead of a silent page leak.
+TERMINAL_STATES = (FINISHED, SHED, ABORTED, QUARANTINED)
+
 # Priority classes, best first. Admission is strict-priority across classes
 # (FIFO within a class), the per-tick prefill budget guarantees the oldest
 # prefill of EACH class a slice (the PR 5 no-starvation guarantee, per
@@ -1463,7 +1470,7 @@ class ContinuousScheduler:
                         self._finish(req)
             still: List[_Prefill] = []
             for pf, n in zip(pfs, shares):
-                if pf.req.state in (ABORTED, QUARANTINED):
+                if pf.req.state in TERMINAL_STATES:
                     continue        # torn down mid-tick; pages already gone
                 if n == 0:
                     still.append(pf)
@@ -1487,7 +1494,7 @@ class ContinuousScheduler:
             # an on_token abort during an install above rebuilt
             # self._prefills; don't resurrect an aborted entry from `still`
             self._prefills = [pf for pf in still
-                              if pf.req.state not in (ABORTED, QUARANTINED)]
+                              if pf.req.state not in TERMINAL_STATES]
         self.peak_running = max(self.peak_running, len(self.running))
         if tr.enabled and self.paged:
             tr.counter("pages", used=self.pool.blocks_in_use(),

@@ -1,0 +1,13 @@
+"""Seeded tracer-flow violations: Python control flow on traced values."""
+import jax
+
+
+@jax.jit
+def step(x, threshold):
+    y = x * 2
+    if y > threshold:               # traced comparison in Python if
+        y = y - 1
+    while x > 0:                    # traced while
+        x = x - 1
+    assert x + y != 0               # traced assert
+    return x + y

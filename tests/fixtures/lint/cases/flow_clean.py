@@ -1,0 +1,17 @@
+"""Clean counterpart: only static control flow under trace."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def step(x, extra, cfg, n_heads: int):
+    if x.ndim == 2:                 # shape metadata: static
+        x = x[None]
+    if extra:                       # container truthiness: static pytree
+        x = x + extra["bias"]
+    if cfg.use_residual:            # config field read: static
+        x = x + x
+    if n_heads > 1:                 # int-annotated host param: static
+        x = x.reshape(x.shape[0], n_heads, -1)
+    assert x is not None            # identity test: static
+    return jnp.where(x > 0, x, 0.0)  # traced branch done the right way

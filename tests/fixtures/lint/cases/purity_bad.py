@@ -1,0 +1,29 @@
+"""Seeded jit-purity violations: host effects inside traced code."""
+import time
+
+import jax
+import numpy as np
+
+COUNTER = 0
+
+
+def _inner(x):
+    print("tracing", x)            # effect two calls deep
+    return x * 2
+
+
+@jax.jit
+def step(x):
+    global COUNTER                 # module-global mutation
+    t = time.time()                # host clock read
+    noise = np.random.normal()     # host RNG
+    y = _inner(x)
+    return y + t + noise
+
+
+def also_traced(metrics, x):
+    metrics.requests.inc()         # metric mutator inside traced code
+    return x
+
+
+compiled = jax.jit(also_traced)

@@ -1,0 +1,12 @@
+"""Seeded rng-discipline violations: split + raw-key draw in serve scope."""
+import jax
+
+
+def bad_split(key):
+    a, b = jax.random.split(key)            # positional, not counter-based
+    return a, b
+
+
+def bad_raw_draw(logits, seed):
+    key = jax.random.PRNGKey(seed)          # raw key, no fold_in chain
+    return jax.random.categorical(key, logits)

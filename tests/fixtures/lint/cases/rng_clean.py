@@ -1,0 +1,18 @@
+"""Clean counterpart: counter-based fold_in chains only (the sampling.py
+pattern, including the vmap'd helper indirection)."""
+import jax
+
+
+def step_keys(base_keys, steps):
+    return jax.vmap(jax.random.fold_in)(base_keys, steps)
+
+
+def draw_direct(seed, sample_idx, token_idx, logits):
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(seed), sample_idx), token_idx)
+    return jax.random.categorical(key, logits)
+
+
+def draw_batched(base_keys, steps, ml):
+    keys = step_keys(base_keys, steps)
+    return jax.vmap(jax.random.categorical)(keys, ml)

@@ -1,0 +1,275 @@
+"""repro-lint suite tests: every rule fires on its seeded fixture and
+stays silent on the clean twin; pragmas suppress only with a reason; the
+baseline allowlist admits and goes stale correctly; and — the tier-1
+gate — the linter runs clean on the real tree.
+
+Fixtures live in tests/fixtures/lint/ (excluded from real-tree lint runs
+and not collected by pytest: nothing there is ``test_``-prefixed).
+"""
+from __future__ import annotations
+
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import LintConfig, run_lint
+
+REPO = Path(__file__).resolve().parents[1]
+FIX = REPO / "tests" / "fixtures" / "lint"
+
+
+def _load_script(name):
+    spec = importlib.util.spec_from_file_location(
+        name, REPO / "scripts" / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def fixture_cfg(case, **kw):
+    """A LintConfig rooted at the fixture corpus, linting one case file."""
+    defaults = dict(
+        root=str(FIX),
+        paths=(f"cases/{case}",),
+        exclude=(),
+        rng_scope=("cases",),
+        wallclock_scope=("cases",),
+        lifecycle_files=(f"cases/{case}",),
+        state_module=f"cases/{case}",
+        metric_scope=("cases",),
+        metrics_doc="docs/catalog_ok.md",
+        bench_baselines="bench/baselines_ok.json",
+        bench_results="bench/results.json",
+        enum_manifest="manifests/enum_ok.json",
+    )
+    defaults.update(kw)
+    return LintConfig(**defaults)
+
+
+def run_rule(rule, case, **kw):
+    return run_lint(fixture_cfg(case, rules=(rule,), **kw))
+
+
+# ---------------------------------------------------------------------------
+# one firing + one non-firing case per rule
+
+
+def test_jit_purity_fires():
+    r = run_rule("jit-purity", "purity_bad.py")
+    msgs = [v.message for v in r.violations]
+    assert any("global" in m for m in msgs)
+    assert any("time.time" in m for m in msgs)
+    assert any("print" in m for m in msgs)
+    assert any("np.random" in m for m in msgs)
+    assert any(".inc()" in m for m in msgs)
+    # the print lives two calls deep: provenance names the entry point
+    deep = [v for v in r.violations if "print" in v.message]
+    assert "jit entry" in deep[0].message
+
+
+def test_jit_purity_clean():
+    r = run_rule("jit-purity", "purity_clean.py")
+    assert r.violations == []
+
+
+def test_rng_discipline_fires():
+    r = run_rule("rng-discipline", "rng_bad.py")
+    assert len(r.violations) == 2
+    assert any("split" in v.message for v in r.violations)
+    assert any("categorical" in v.message for v in r.violations)
+
+
+def test_rng_discipline_clean():
+    r = run_rule("rng-discipline", "rng_clean.py")
+    assert r.violations == []
+
+
+def test_tracer_flow_fires():
+    r = run_rule("tracer-flow", "flow_bad.py")
+    kinds = sorted(v.message.split("`")[1] for v in r.violations)
+    assert kinds == ["assert", "if", "while"]
+
+
+def test_tracer_flow_clean():
+    r = run_rule("tracer-flow", "flow_clean.py")
+    assert r.violations == []
+
+
+def test_state_exhaustive_fires():
+    r = run_rule("state-exhaustive", "lifecycle_bad.py")
+    msgs = [v.message for v in r.violations]
+    assert any("ladder" in m for m in msgs)
+    assert any("membership" in m for m in msgs)
+    assert any("mapping" in m for m in msgs)
+    # each message names what is missing
+    assert any("quarantined" in m for m in msgs)
+
+
+def test_state_exhaustive_clean():
+    r = run_rule("state-exhaustive", "lifecycle_clean.py")
+    assert r.violations == []
+
+
+def test_enum_append_fires():
+    r = run_rule("enum-append", "enum_mod.py",
+                 enum_manifest="manifests/enum_bad.json")
+    msgs = [v.message for v in r.violations]
+    assert any("diverges" in m for m in msgs)          # reordered KINDS
+    assert any("grew" in m for m in msgs)              # unpinned growth
+
+
+def test_enum_append_clean():
+    r = run_rule("enum-append", "enum_clean_mod.py")
+    assert r.violations == []
+
+
+def test_metric_catalog_fires():
+    r = run_rule("metric-catalog", "catalog_code.py",
+                 metrics_doc="docs/catalog_bad.md")
+    msgs = [v.message for v in r.violations]
+    assert any("fix_undocumented_ms" in m for m in msgs)
+    assert any("fix_shed_*_total" in m for m in msgs)   # f-string pattern
+    assert any("fix_removed_total" in m for m in msgs)  # stale doc row
+
+
+def test_metric_catalog_clean():
+    r = run_rule("metric-catalog", "catalog_code.py")
+    assert r.violations == []
+
+
+def test_bench_keys_fires():
+    r = run_rule("bench-keys", "catalog_code.py",
+                 bench_baselines="bench/baselines_bad.json")
+    msgs = [v.message for v in r.violations]
+    assert any("gone_metric" in m and "no path" in m for m in msgs)
+    assert any("non-numeric" in m for m in msgs)
+    assert any("expectt" in m for m in msgs)
+    assert any("vacuous" in m for m in msgs)
+
+
+def test_bench_keys_clean():
+    r = run_rule("bench-keys", "catalog_code.py")
+    assert r.violations == []
+
+
+def test_wallclock_fires():
+    r = run_rule("wallclock", "wallclock_bad.py")
+    assert len(r.violations) == 1
+    assert "time.time()" in r.violations[0].message
+
+
+def test_wallclock_clean():
+    r = run_rule("wallclock", "wallclock_clean.py")
+    assert r.violations == []
+
+
+# ---------------------------------------------------------------------------
+# pragmas + baseline
+
+
+def test_pragma_suppression():
+    r = run_rule("wallclock", "pragma_case.py")
+    # reasonless pragma never suppresses; the two justified ones do
+    assert len(r.violations) == 1
+    assert len(r.suppressed) == 2
+    reasons = {reason for _, reason in r.suppressed}
+    assert all(reason for reason in reasons)
+
+
+def test_baseline_admits_and_goes_stale():
+    cfg = fixture_cfg("wallclock_bad.py", rules=("wallclock",))
+    raw = run_lint(cfg)
+    fp = raw.violations[0].fingerprint
+    ok = run_lint(cfg, baseline=[fp])
+    assert ok.violations == [] and len(ok.baselined) == 1
+    assert not ok.failed(strict=True)
+    stale = run_lint(cfg, baseline=[fp, "cases/nope.py:wallclock:gone"])
+    assert stale.stale_baseline == ["cases/nope.py:wallclock:gone"]
+    assert stale.failed(strict=True) and not stale.failed(strict=False)
+
+
+def test_parse_error_is_reported():
+    bad = FIX / "cases" / "_syntax_err_tmp.py"
+    bad.write_text("def broken(:\n", encoding="utf-8")
+    try:
+        r = run_lint(fixture_cfg("_syntax_err_tmp.py", rules=("wallclock",)))
+        assert r.parse_errors and r.parse_errors[0].rule == "parse"
+        assert r.failed(strict=False)
+    finally:
+        bad.unlink()
+
+
+# ---------------------------------------------------------------------------
+# the real gates
+
+
+def test_linter_clean_on_real_tree():
+    """The CI contract: scripts/lint_repro.py --strict exits 0 here."""
+    from repro.analysis import load_baseline
+    cfg = LintConfig(root=str(REPO))
+    r = run_lint(cfg, baseline=load_baseline(
+        str(REPO / "scripts" / "lint_baseline.json")))
+    rendered = "\n".join(v.render() for v in r.violations)
+    assert r.violations == [], f"repro-lint findings:\n{rendered}"
+    assert not r.failed(strict=True), (
+        f"stale baseline entries: {r.stale_baseline}")
+
+
+def test_metrics_registry_clock_injectable(tmp_path):
+    from repro.obs.metrics import MetricsRegistry
+    out = tmp_path / "m.jsonl"
+    for _ in range(2):
+        reg = MetricsRegistry(clock=lambda: 123.0)
+        reg.counter("x_total", "x").inc()
+        reg.write_jsonl(str(out))
+    lines = out.read_text().splitlines()
+    assert lines[0] == lines[1]                 # byte-identical exports
+    assert json.loads(lines[0])["ts"] == 123.0
+
+
+# ---------------------------------------------------------------------------
+# script satellites (imported by path: scripts/ is not a package)
+
+
+def test_check_bench_fails_on_silent_holes(capsys):
+    cb = _load_script("check_bench")
+    rc = cb.main(["--bench", str(FIX / "bench" / "results.json"),
+                  "--baselines", str(FIX / "bench" / "baselines_bad.json")])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "stale gate" in out                  # missing key path
+    assert "non-numeric" in out
+    assert "unknown field" in out
+    assert "vacuous" in out
+
+
+def test_check_bench_passes_well_formed(capsys):
+    cb = _load_script("check_bench")
+    rc = cb.main(["--bench", str(FIX / "bench" / "results.json"),
+                  "--baselines", str(FIX / "bench" / "baselines_ok.json")])
+    assert rc == 0
+    assert "2 baseline rules pass" in capsys.readouterr().out
+
+
+def test_check_docs_flag_extraction_and_detection(tmp_path):
+    cd = _load_script("check_docs")
+    # real tree: serve.py flags are all discovered
+    flags = cd.argparse_flags(REPO)
+    assert "--seed" in flags and "--prefix-cache-pages" in flags
+    # synthetic tree: a documented flag with no argparse home is caught
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "serving.md").write_text(
+        "run with `--no-such-flag 3`\n", encoding="utf-8")
+    bad, checked = cd.check_flags(tmp_path)
+    assert checked == 1 and len(bad) == 1
+    assert "--no-such-flag" in bad[0]
+
+
+def test_check_docs_real_tree_clean():
+    cd = _load_script("check_docs")
+    bad, checked = cd.check_flags(REPO)
+    assert bad == [], "\n".join(bad)
+    assert checked > 50                         # the docs are flag-dense
